@@ -1,0 +1,85 @@
+"""Shared benchmark utilities.
+
+Measured numbers on this container are CPU-hosted (Pallas interpret mode
+executes kernel bodies via XLA:CPU); each bench also derives the TPU-v5e
+projection from the kernel's static op counts where meaningful.  The CSV
+contract is ``name,us_per_call,derived`` (derived = bench-specific:
+speedup, throughput MB/s, similarity %, ...).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+Row = Tuple[str, float, str]
+
+
+def timeit(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds per call."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def mbps(nbytes: int, seconds: float) -> float:
+    return nbytes / max(seconds, 1e-12) / 1e6
+
+
+def synth_data(n: int, seed: int = 0) -> bytes:
+    return np.random.default_rng(seed).integers(
+        0, 256, n, dtype=np.uint8).tobytes()
+
+
+def checkpoint_series(n_images: int, image_bytes: int,
+                      change_frac: float = 0.15, seed: int = 0):
+    """Synthetic BLCR-like checkpoint images: each successive image
+    rewrites a contiguous region in place AND applies an insert/delete
+    pair (heap growth shifts content — what makes fixed-block dedup fail
+    in the paper: 21-23% fixed vs 76-90% CDC similarity)."""
+    rng = np.random.default_rng(seed)
+    img = rng.integers(0, 256, image_bytes, dtype=np.uint8)
+    out = [img.tobytes()]
+    for i in range(1, n_images):
+        buf = bytearray(img.tobytes())
+        span = int(image_bytes * change_frac)
+        start = int(rng.integers(0, len(buf) - span))
+        buf[start:start + span] = rng.integers(
+            0, 256, span, dtype=np.uint8).tobytes()
+        # insert/delete pair: shifts everything between the two points
+        k = int(rng.integers(1, 4096))
+        ins = int(rng.integers(0, len(buf)))
+        buf[ins:ins] = rng.integers(0, 256, k, dtype=np.uint8).tobytes()
+        del_at = int(rng.integers(0, len(buf) - k))
+        del buf[del_at:del_at + k]
+        img = np.frombuffer(bytes(buf), dtype=np.uint8)
+        out.append(bytes(buf))
+    return out
+
+
+# TPU v5e model for projections (same constants as §Roofline)
+V5E_PEAK_BF16 = 197e12
+V5E_HBM_BW = 819e9
+# VPU integer throughput: 8x128 lanes * 2 ops/cycle? conservatively
+# 1 int32 op/lane/cycle at 940 MHz x 4 MXU-adjacent VPUs ~ 3.9e12 ops/s.
+V5E_INT_OPS = 3.9e12
+
+# uint32 ALU ops per byte of input — MEASURED from compiled kernel HLO
+# by the repo's analyzer (benchmarks/kernel_roofline.py); napkin values
+# in comments
+OPS_PER_BYTE = {
+    "sliding_md5": 635.3,            # stride 1 (napkin 640)
+    "direct_md5": 60.9,              # napkin ~12; padding-select machinery
+    "gear": 85.0,                    # napkin ~73
+}
+
+
+def project_v5e_throughput(kind: str) -> float:
+    """Projected bytes/s on one v5e chip for a VPU-bound hashing kernel."""
+    return V5E_INT_OPS / OPS_PER_BYTE[kind]

@@ -1,0 +1,86 @@
+"""Figures 12-17: impact on competing applications.
+
+A compute-bound competitor (prime search) and an IO-bound competitor
+(file write/read loop) run concurrently with the storage write stream;
+we report the competitor slowdown vs an unloaded host and the storage
+throughput under contention.  (Single-core container: contention is
+maximal — the paper's 8-core client shows smaller slowdowns; trends, not
+magnitudes, transfer.)"""
+from __future__ import annotations
+
+import os
+import tempfile
+import threading
+import time
+
+from benchmarks.common import mbps, synth_data
+from repro.core import SAI, SAIConfig, make_store
+
+FILE_MB = 1
+N_FILES = 3
+
+
+def _prime_work(stop, count):
+    n = 0
+    x = 10_000_019
+    while not stop.is_set():
+        is_p = all(x % d for d in range(3, 2000, 2))
+        x += 2
+        n += 1
+    count.append(n)
+
+
+def _io_work(stop, count):
+    n = 0
+    buf = synth_data(256 << 10, seed=5)
+    with tempfile.NamedTemporaryFile(delete=True) as f:
+        while not stop.is_set():
+            f.seek(0)
+            f.write(buf)
+            f.flush()
+            os.fsync(f.fileno())
+            f.seek(0)
+            f.read()
+            n += 1
+    count.append(n)
+
+
+def _competitor_rate(worker, seconds=2.0) -> float:
+    stop, count = threading.Event(), []
+    t = threading.Thread(target=worker, args=(stop, count))
+    t.start()
+    time.sleep(seconds)
+    stop.set()
+    t.join()
+    return count[0] / seconds
+
+
+def run() -> list:
+    rows: list = []
+    files = [synth_data(FILE_MB << 20, seed=i) for i in range(N_FILES)]
+
+    for comp_name, worker in (("compute", _prime_work), ("io", _io_work)):
+        base_rate = _competitor_rate(worker)
+        for cname, ca, hasher in (("nonCA", "none", "cpu"),
+                                  ("CA_CPU", "fixed", "cpu"),
+                                  ("CA_TPU", "fixed", "tpu")):
+            mgr, _ = make_store(4)
+            sai = SAI(mgr, SAIConfig(ca=ca, hasher=hasher,
+                                     block_size=256 << 10))
+            stop, count = threading.Event(), []
+            t = threading.Thread(target=worker, args=(stop, count))
+            t.start()
+            t0 = time.perf_counter()
+            for i, f in enumerate(files):
+                sai.write(f"/c/{i}", f)
+            dt = time.perf_counter() - t0
+            elapsed = time.perf_counter() - t0
+            stop.set()
+            t.join()
+            rate = count[0] / max(elapsed, dt, 1e-9)
+            slowdown = 100 * (base_rate - rate) / base_rate
+            rows.append(
+                (f"fig12_17/{comp_name}/{cname}", dt / N_FILES * 1e6,
+                 f"store={mbps(FILE_MB<<20, dt/N_FILES):.1f}MBps_"
+                 f"competitor_slowdown={slowdown:.0f}%"))
+    return rows

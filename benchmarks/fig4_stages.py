@@ -1,0 +1,30 @@
+"""Figure 4: per-stage time breakdown of sliding-window hashing WITHOUT
+CrystalTPU optimizations (alloc/copy-in dominates the paper's GPU runs at
+80-96%; we measure the same staged pipeline on this host)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, synth_data
+from repro.core import CrystalTPU
+
+
+def run() -> list:
+    rows: list = []
+    for size in (256 << 10, 1 << 20):
+        c = CrystalTPU(buffer_reuse=False, overlap=False, n_slots=2)
+        try:
+            data = np.frombuffer(synth_data(size), np.uint8)
+            # warmup (compile)
+            c.submit("sliding", data, {"window": 48, "stride": 4}).wait()
+            job = c.submit("sliding", data, {"window": 48, "stride": 4})
+            job.wait()
+            t = job.timings
+            total = sum(t.values())
+            for stage in ("in", "kernel", "out"):
+                pct = 100 * t[stage] / total
+                rows.append((f"fig4/stage_{stage}/{size>>10}KB",
+                             t[stage] * 1e6, f"{pct:.1f}%_of_total"))
+        finally:
+            c.shutdown()
+    return rows

@@ -1,0 +1,45 @@
+"""Figure 6: direct hashing (fixed-size blocks) — ablation + CPU baseline."""
+from __future__ import annotations
+
+import hashlib
+import time
+
+import numpy as np
+
+from benchmarks.common import mbps, project_v5e_throughput, synth_data
+from repro.core import CrystalTPU
+
+STREAM = 4
+SEG = 4096
+
+
+def run() -> list:
+    rows: list = []
+    for size in (1 << 20, 4 << 20):
+        raw = synth_data(size)
+        data = np.frombuffer(raw, np.uint8)
+        t0 = time.perf_counter()
+        for i in range(0, size, SEG):
+            hashlib.md5(raw[i:i + SEG]).digest()
+        t_cpu = time.perf_counter() - t0
+        rows.append((f"fig6/cpu_1core/{size>>20}MB", t_cpu * 1e6,
+                     f"{mbps(size, t_cpu):.1f}MBps"))
+        for name, r, o in [("no_opt", False, False),
+                           ("reuse+overlap", True, True)]:
+            c = CrystalTPU(buffer_reuse=r, overlap=o, n_slots=4)
+            try:
+                c.submit("direct", data, {"seg_bytes": SEG}).wait()
+                t0 = time.perf_counter()
+                jobs = c.map_stream("direct", [data] * STREAM,
+                                    {"seg_bytes": SEG})
+                for j in jobs:
+                    j.wait()
+                t = (time.perf_counter() - t0) / STREAM
+            finally:
+                c.shutdown()
+            rows.append((f"fig6/{name}/{size>>20}MB", t * 1e6,
+                         f"speedup_vs_cpu={t_cpu/t:.2f}x"))
+        proj = project_v5e_throughput("direct_md5")
+        rows.append((f"fig6/v5e_projected/{size>>20}MB", size / proj * 1e6,
+                     f"{proj/1e6:.0f}MBps"))
+    return rows

@@ -1,0 +1,44 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Select subsets with
+``python -m benchmarks.run fig5 fig11``.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.fig4_stages",
+    "benchmarks.fig5_sliding",
+    "benchmarks.fig6_direct",
+    "benchmarks.fig7_10_workloads",
+    "benchmarks.fig11_checkpoint",
+    "benchmarks.fig12_17_competing",
+    "benchmarks.sec4_2_cpu_vs_accel",
+    "benchmarks.kernel_roofline",
+]
+
+
+def main() -> None:
+    want = sys.argv[1:]
+    print("name,us_per_call,derived")
+    failed = 0
+    for modname in MODULES:
+        short = modname.split(".")[-1]
+        if want and not any(w in short for w in want):
+            continue
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception:
+            failed += 1
+            print(f"{short},ERROR,see_stderr", flush=True)
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""The paper's checkpoint workload (Figure 11) end-to-end: successive
+checkpoint images written through the CA store, fixed-size vs
+content-based chunking, with similarity detection and storage savings.
+
+  PYTHONPATH=src python examples/dedup_checkpoint_store.py
+"""
+import numpy as np
+
+from repro.core import SAI, SAIConfig, make_store
+
+
+def checkpoint_series(n_images, image_bytes, change_frac=0.15, seed=0):
+    """Synthetic BLCR-like checkpoint images: each successive image
+    rewrites a contiguous region in place AND applies an insert/delete
+    pair (heap growth shifts content — what makes fixed-block dedup fail
+    in the paper: 21-23% fixed vs 76-90% CDC similarity)."""
+    rng = np.random.default_rng(seed)
+    img = rng.integers(0, 256, image_bytes, dtype=np.uint8)
+    out = [img.tobytes()]
+    for i in range(1, n_images):
+        buf = bytearray(img.tobytes())
+        span = int(image_bytes * change_frac)
+        start = int(rng.integers(0, len(buf) - span))
+        buf[start:start + span] = rng.integers(
+            0, 256, span, dtype=np.uint8).tobytes()
+        # insert/delete pair: shifts everything between the two points
+        k = int(rng.integers(1, 4096))
+        ins = int(rng.integers(0, len(buf)))
+        buf[ins:ins] = rng.integers(0, 256, k, dtype=np.uint8).tobytes()
+        del_at = int(rng.integers(0, len(buf) - k))
+        del buf[del_at:del_at + k]
+        img = np.frombuffer(bytes(buf), dtype=np.uint8)
+        out.append(bytes(buf))
+    return out
+
+
+images = checkpoint_series(n_images=5, image_bytes=2 << 20,
+                           change_frac=0.15)
+total = sum(len(i) for i in images)
+
+for ca in ("fixed", "cdc-gear"):
+    mgr, _ = make_store(4, replication=1)
+    # chunk:image ratio scaled to the paper's (256KB-4MB on 264MB images)
+    sai = SAI(mgr, SAIConfig(ca=ca, block_size=16 << 10,
+                             avg_chunk=16 << 10, min_chunk=4 << 10,
+                             max_chunk=64 << 10, hasher="tpu"))
+    sims = []
+    for i, img in enumerate(images):
+        st = sai.write("/ckpt", img)
+        if i:
+            sims.append(st.similarity)
+    stored = mgr.stats()["stored_bytes"]
+    print(f"{ca:9s}: wrote {total/1e6:.0f} MB, stored {stored/1e6:.1f} MB "
+          f"({100*(1-stored/total):.0f}% saved), "
+          f"mean similarity {100*np.mean(sims):.0f}% "
+          f"(paper: fixed 21-23%, CDC 76-90%)")
+    # every version still restorable
+    for v in range(len(images)):
+        assert sai.read("/ckpt", version=v) == images[v]
+print("all versions verified restorable")

@@ -1,0 +1,14 @@
+"""Batched serving example: prefill a batch of prompts and decode.
+
+  PYTHONPATH=src python examples/serve_lm.py [--arch mixtral-8x7b]
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    if len(sys.argv) == 1:
+        sys.argv += ["--arch", "llama3-8b", "--preset", "100m",
+                     "--batch", "4", "--prompt-len", "64",
+                     "--new-tokens", "16"]
+    main()

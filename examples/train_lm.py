@@ -1,0 +1,15 @@
+"""End-to-end training driver example: ~65M-param llama3-family model,
+200 steps with content-addressable checkpointing (the paper's technique
+as the framework's checkpoint layer) and one injected failure+restart.
+
+  PYTHONPATH=src python examples/train_lm.py
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "llama3-8b", "--preset", "100m",
+                "--steps", "200", "--batch", "2", "--seq", "128",
+                "--ckpt-every", "50", "--fail-at", "120"]
+    main()

@@ -1,0 +1,9 @@
+"""The paper's primary contribution: accelerator-offloaded hashing for a
+content-addressable storage system — HashTPU kernels (repro.kernels),
+the CrystalTPU task runtime, the MosaStore-analog CA store and client SAI,
+plus chunking / integrity substrates."""
+from repro.core.castore import (MetadataManager, StorageNode, BlockMeta,  # noqa: F401
+                                NodeFailure, make_store)
+from repro.core.crystal import CrystalTPU, Job  # noqa: F401
+from repro.core.sai import SAI, SAIConfig, WriteStats  # noqa: F401
+from repro.core import chunking, integrity  # noqa: F401

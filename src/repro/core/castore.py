@@ -1,0 +1,186 @@
+"""Content-addressable distributed storage substrate (MosaStore analog).
+
+Object-based architecture mirroring the paper's Figure 2: a centralized
+metadata manager holding per-file block-maps (block hash, length, replica
+locations), N storage nodes holding blocks keyed by content hash, and
+client-side striping over nodes.  Replication + node-failure handling +
+re-replication give the fault-tolerance substrate the training framework's
+checkpoint layer builds on.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class NodeFailure(RuntimeError):
+    pass
+
+
+class StorageNode:
+    """One storage node: content-hash -> block bytes."""
+
+    def __init__(self, node_id: int):
+        self.node_id = node_id
+        self.blocks: Dict[bytes, bytes] = {}
+        self.failed = False
+        self._lock = threading.Lock()
+        self.put_count = 0
+        self.get_count = 0
+
+    def put(self, digest: bytes, data: bytes):
+        if self.failed:
+            raise NodeFailure(f"node {self.node_id} down")
+        with self._lock:
+            self.blocks[digest] = data
+            self.put_count += 1
+
+    def get(self, digest: bytes) -> bytes:
+        if self.failed:
+            raise NodeFailure(f"node {self.node_id} down")
+        with self._lock:
+            self.get_count += 1
+            if digest not in self.blocks:
+                raise KeyError(digest.hex())
+            return self.blocks[digest]
+
+    def has(self, digest: bytes) -> bool:
+        return not self.failed and digest in self.blocks
+
+    def used_bytes(self) -> int:
+        return sum(len(v) for v in self.blocks.values())
+
+    def fail(self):
+        self.failed = True
+
+    def recover_empty(self):
+        self.failed = False
+        self.blocks.clear()
+
+
+@dataclass
+class BlockMeta:
+    digest: bytes
+    length: int
+    nodes: Tuple[int, ...]            # replica locations
+
+
+@dataclass
+class FileVersion:
+    blocks: List[BlockMeta]
+    total_len: int
+    timestamp: float = field(default_factory=time.time)
+
+
+class MetadataManager:
+    """Centralized manager: file -> versioned block-maps + block registry."""
+
+    def __init__(self, nodes: Sequence[StorageNode], replication: int = 1):
+        self.nodes = list(nodes)
+        self.replication = max(1, replication)
+        self.files: Dict[str, List[FileVersion]] = {}
+        self.block_registry: Dict[bytes, Tuple[int, ...]] = {}
+        self._rr = 0
+        self._lock = threading.Lock()
+
+    # -- placement ---------------------------------------------------------
+    def place(self, digest: bytes) -> Tuple[int, ...]:
+        """Round-robin striping over live nodes with r replicas."""
+        with self._lock:
+            if digest in self.block_registry:
+                locs = [n for n in self.block_registry[digest]
+                        if not self.nodes[n].failed]
+                if locs:
+                    return tuple(locs)
+            live = [n.node_id for n in self.nodes if not n.failed]
+            if len(live) < self.replication:
+                raise NodeFailure("not enough live nodes for replication")
+            start = self._rr
+            self._rr += 1
+            return tuple(live[(start + k) % len(live)]
+                         for k in range(self.replication))
+
+    def register_block(self, digest: bytes, nodes: Tuple[int, ...]):
+        with self._lock:
+            prev = set(self.block_registry.get(digest, ()))
+            self.block_registry[digest] = tuple(sorted(prev | set(nodes)))
+
+    def lookup_block(self, digest: bytes) -> Tuple[int, ...]:
+        return self.block_registry.get(digest, ())
+
+    # -- block-maps ----------------------------------------------------------
+    def commit_blockmap(self, path: str, blocks: List[BlockMeta],
+                        total_len: int):
+        with self._lock:
+            self.files.setdefault(path, []).append(
+                FileVersion(blocks=blocks, total_len=total_len))
+
+    def get_blockmap(self, path: str,
+                     version: int = -1) -> Optional[FileVersion]:
+        versions = self.files.get(path)
+        if not versions:
+            return None
+        return versions[version]
+
+    def list_files(self) -> List[str]:
+        return sorted(self.files)
+
+    # -- failure handling ----------------------------------------------------
+    def handle_node_failure(self, node_id: int) -> int:
+        """Re-replicate blocks that lost a replica.  Returns blocks moved."""
+        self.nodes[node_id].fail()
+        moved = 0
+        for digest, locs in list(self.block_registry.items()):
+            live = [n for n in locs
+                    if n != node_id and not self.nodes[n].failed]
+            if len(live) >= self.replication:
+                self.block_registry[digest] = tuple(live)
+                continue
+            if not live:
+                continue                    # data loss (r=1): detected on read
+            data = self.nodes[live[0]].get(digest)
+            candidates = [n.node_id for n in self.nodes
+                          if not n.failed and n.node_id not in live]
+            for target in candidates[:self.replication - len(live)]:
+                self.nodes[target].put(digest, data)
+                live.append(target)
+                moved += 1
+            self.block_registry[digest] = tuple(sorted(live))
+        return moved
+
+    def gc_unreferenced(self) -> int:
+        """Delete blocks not referenced by any committed block-map."""
+        referenced = set()
+        for versions in self.files.values():
+            for v in versions:
+                for b in v.blocks:
+                    referenced.add(b.digest)
+        removed = 0
+        for digest in list(self.block_registry):
+            if digest in referenced:
+                continue
+            for nid in self.block_registry[digest]:
+                node = self.nodes[nid]
+                if not node.failed:
+                    node.blocks.pop(digest, None)
+                    removed += 1
+            del self.block_registry[digest]
+        return removed
+
+    def stats(self) -> dict:
+        return {
+            "files": len(self.files),
+            "unique_blocks": len(self.block_registry),
+            "stored_bytes": sum(n.used_bytes() for n in self.nodes
+                                if not n.failed),
+            "live_nodes": sum(not n.failed for n in self.nodes),
+        }
+
+
+def make_store(n_nodes: int = 4,
+               replication: int = 1) -> Tuple[MetadataManager,
+                                              List[StorageNode]]:
+    nodes = [StorageNode(i) for i in range(n_nodes)]
+    return MetadataManager(nodes, replication=replication), nodes

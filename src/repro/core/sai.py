@@ -1,0 +1,275 @@
+"""Client System Access Interface (SAI) — the MosaStore client analog.
+
+Implements the paper's write path (Figure 3): buffered writes are chunked
+(fixed-size or content-based via the accelerator), chunk hashes are
+computed by HashTPU through CrystalTPU, compared against the previous
+version's block-map for similarity detection, and only novel blocks are
+striped over the storage nodes.  The read path re-hashes fetched blocks
+(implicit integrity check of content addressing) and falls back to block
+replicas on node failure.
+
+Configurations mirror the paper's evaluation matrix:
+  ca='none'                 -> non-CA (direct write, no hashing)
+  ca='fixed'                -> fixed-size blocks + direct hashing
+  ca='cdc'                  -> content-based chunking (sliding-window MD5)
+  ca='cdc-gear'             -> beyond-paper gear-hash CDC
+  hasher='tpu' | 'cpu' | 'infinite'   ('infinite' = the paper's CA-Infinite
+        oracle: hash computation takes zero time — upper performance bound)
+"""
+from __future__ import annotations
+
+import hashlib
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import chunking
+from repro.core.castore import BlockMeta, MetadataManager, NodeFailure
+from repro.core.crystal import CrystalTPU
+from repro.kernels import ops
+
+
+@dataclass
+class SAIConfig:
+    ca: str = "fixed"                 # none | fixed | cdc | cdc-gear
+    block_size: int = 1 << 20         # fixed-size block bytes
+    avg_chunk: int = 1 << 20          # CDC target chunk
+    min_chunk: int = 256 << 10
+    max_chunk: int = 4 << 20
+    window: int = 48
+    stride: int = 4
+    hasher: str = "tpu"               # tpu | cpu | infinite
+    stripe_width: int = 4
+
+
+@dataclass
+class WriteStats:
+    total_bytes: int = 0
+    new_bytes: int = 0
+    new_blocks: int = 0
+    dup_blocks: int = 0
+    stage_s: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def similarity(self) -> float:
+        total = self.new_blocks + self.dup_blocks
+        return self.dup_blocks / total if total else 0.0
+
+
+_ORACLE_COUNTER = [0]
+
+
+class SAI:
+    def __init__(self, manager: MetadataManager, config: SAIConfig,
+                 crystal: Optional[CrystalTPU] = None):
+        self.manager = manager
+        self.cfg = config
+        self.crystal = crystal
+
+    # ------------------------------------------------------------------
+    # hashing backends
+    # ------------------------------------------------------------------
+    def _hash_chunks(self, chunks: List[bytes]) -> List[bytes]:
+        cfg = self.cfg
+        if cfg.hasher in ("infinite", "cpu"):
+            # 'infinite' is the paper's CA-Infinite oracle — its hashing
+            # time is excluded from the timed stages by the caller.
+            return [block_digest_cpu(c) for c in chunks]
+        # tpu: batch via HashTPU direct hashing.  Canonical block digest =
+        # MD5( zero-pad-to-word(data) || u32_le(byte_length) ): the length
+        # trailer disambiguates chunks that differ only in trailing zero
+        # padding (CDC boundaries are byte-exact).
+        seg = max(len(c) for c in chunks)
+        seg = (seg + 3) // 4 * 4 + 4
+        # bucket the padded width to a power of two: bounds jit retraces
+        # across writes with ragged max-chunk lengths
+        seg = 1 << (seg - 1).bit_length()
+        arr = np.zeros((len(chunks), seg), np.uint8)
+        lens = np.zeros((len(chunks),), np.int64)
+        for i, c in enumerate(chunks):
+            padded = (len(c) + 3) // 4 * 4
+            arr[i, :len(c)] = np.frombuffer(c, np.uint8)
+            arr[i, padded:padded + 4] = np.frombuffer(
+                np.uint32(len(c)).tobytes(), np.uint8)
+            lens[i] = padded + 4
+        digs = ops.direct_hash(arr, lens)
+        return [digs[i].tobytes() for i in range(len(chunks))]
+
+    def _boundaries(self, data: bytes) -> List[int]:
+        cfg = self.cfg
+        if cfg.ca == "fixed":
+            n = (len(data) + cfg.block_size - 1) // cfg.block_size
+            return [min((i + 1) * cfg.block_size, len(data))
+                    for i in range(n)]
+        if cfg.ca == "cdc":
+            if cfg.hasher == "tpu" and self.crystal is not None:
+                job = self.crystal.submit(
+                    "sliding", np.frombuffer(data, np.uint8),
+                    {"window": cfg.window, "stride": cfg.stride})
+                hashes = job.wait()
+            elif cfg.hasher == "tpu":
+                hashes = ops.sliding_window_hash(
+                    data, window=cfg.window, stride=cfg.stride)
+            else:
+                hashes = _cpu_sliding(data, cfg.window, cfg.stride)
+            return chunking.select_boundaries(
+                hashes, len(data), window=cfg.window, stride=cfg.stride,
+                avg_chunk=cfg.avg_chunk, min_chunk=cfg.min_chunk,
+                max_chunk=cfg.max_chunk)
+        if cfg.ca == "cdc-gear":
+            if cfg.hasher == "tpu" and self.crystal is not None:
+                job = self.crystal.submit(
+                    "gear", np.frombuffer(data, np.uint8), {})
+                hashes = job.wait()
+            elif cfg.hasher == "tpu":
+                hashes = ops.gear_hash(data)
+            else:
+                hashes = _cpu_gear(data)
+            return chunking.select_boundaries(
+                hashes, len(data), window=1, stride=1,
+                avg_chunk=cfg.avg_chunk, min_chunk=cfg.min_chunk,
+                max_chunk=cfg.max_chunk)
+        raise ValueError(self.cfg.ca)
+
+    # ------------------------------------------------------------------
+    # write path
+    # ------------------------------------------------------------------
+    def write(self, path: str, data: bytes) -> WriteStats:
+        cfg = self.cfg
+        stats = WriteStats(total_bytes=len(data))
+        mgr = self.manager
+
+        if cfg.ca == "none":
+            t0 = time.perf_counter()
+            bs = cfg.block_size
+            blocks = []
+            for i in range(0, max(len(data), 1), bs):
+                chunk = data[i:i + bs]
+                _ORACLE_COUNTER[0] += 1
+                digest = b"raw!" + _ORACLE_COUNTER[0].to_bytes(12, "little")
+                locs = mgr.place(digest)
+                for nid in locs:
+                    mgr.nodes[nid].put(digest, chunk)
+                mgr.register_block(digest, locs)
+                blocks.append(BlockMeta(digest, len(chunk), locs))
+                stats.new_blocks += 1
+                stats.new_bytes += len(chunk)
+            mgr.commit_blockmap(path, blocks, len(data))
+            stats.stage_s = {"store": time.perf_counter() - t0}
+            return stats
+
+        t0 = time.perf_counter()
+        bounds = self._boundaries(data)
+        chunks = chunking.split_chunks(data, bounds)
+        t1 = time.perf_counter()
+        if cfg.hasher == "infinite":
+            digests = self._hash_chunks(chunks)
+            t2 = t1                      # oracle: hashing is free
+        else:
+            digests = self._hash_chunks(chunks)
+            t2 = time.perf_counter()
+
+        prev = mgr.get_blockmap(path)
+        known = {b.digest for b in prev.blocks} if prev else set()
+
+        blocks: List[BlockMeta] = []
+        for chunk, digest in zip(chunks, digests):
+            if digest in known or mgr.lookup_block(digest):
+                locs = mgr.lookup_block(digest) or \
+                    next(b.nodes for b in prev.blocks if b.digest == digest)
+                stats.dup_blocks += 1
+            else:
+                locs = mgr.place(digest)
+                for nid in locs:
+                    mgr.nodes[nid].put(digest, chunk)
+                mgr.register_block(digest, locs)
+                stats.new_blocks += 1
+                stats.new_bytes += len(chunk)
+            blocks.append(BlockMeta(digest, len(chunk), tuple(locs)))
+        mgr.commit_blockmap(path, blocks, len(data))
+        t3 = time.perf_counter()
+        stats.stage_s = {"chunk": t1 - t0, "hash": t2 - t1,
+                         "store": t3 - t2}
+        return stats
+
+    # ------------------------------------------------------------------
+    # read path
+    # ------------------------------------------------------------------
+    def read(self, path: str, version: int = -1,
+             verify: bool = True) -> bytes:
+        fv = self.manager.get_blockmap(path, version)
+        if fv is None:
+            raise FileNotFoundError(path)
+        out = bytearray()
+        for b in fv.blocks:
+            data = None
+            locs = self.manager.lookup_block(b.digest) or b.nodes
+            last_err: Optional[Exception] = None
+            for nid in locs:
+                try:
+                    data = self.manager.nodes[nid].get(b.digest)
+                    break
+                except (NodeFailure, KeyError) as e:
+                    last_err = e
+            if data is None:
+                raise NodeFailure(
+                    f"block {b.digest.hex()[:8]} unavailable: {last_err}")
+            if verify and not b.digest.startswith(b"raw!"):
+                if block_digest_cpu(data) != b.digest:
+                    raise IOError(
+                        f"integrity check failed for {b.digest.hex()[:8]}")
+            out += data
+        return bytes(out[:fv.total_len])
+
+
+def _pad4(data: bytes) -> bytes:
+    return data + b"\x00" * ((-len(data)) % 4)
+
+
+def block_digest_cpu(data: bytes) -> bytes:
+    """Canonical block digest (hashlib path):
+    MD5( pad4(data) || u32_le(len) ) — identical to the TPU kernel path."""
+    return hashlib.md5(
+        _pad4(data) + np.uint32(len(data)).tobytes()).digest()
+
+
+def _cpu_sliding(data: bytes, window: int, stride: int) -> np.ndarray:
+    """Single-core CPU sliding-window hashing (the paper's CPU baseline)."""
+    n = (len(data) - window) // stride + 1
+    out = np.empty((n,), np.uint32)
+    view = memoryview(data)
+    for i in range(n):
+        o = i * stride
+        out[i] = int.from_bytes(
+            hashlib.md5(view[o:o + window]).digest()[:4], "little")
+    return out
+
+
+def _cpu_gear(data: bytes, vectorized: bool = True) -> np.ndarray:
+    """Gear hash (FastCDC recurrence) on the CPU.
+
+    ``vectorized`` uses the 32-tap convolution form (SIMD-style numpy —
+    the optimized CPU implementation); ``vectorized=False`` runs the
+    literal sequential recurrence (tests assert both are identical)."""
+    import numpy as _np
+    b = _np.frombuffer(data, _np.uint8).astype(_np.uint32) + 1
+    # mix32
+    x = b.copy()
+    x ^= x >> 16
+    x = (x * _np.uint32(0x85EBCA6B)) & _np.uint32(0xFFFFFFFF)
+    x ^= x >> 13
+    x = (x * _np.uint32(0xC2B2AE35)) & _np.uint32(0xFFFFFFFF)
+    x ^= x >> 16
+    if vectorized:
+        h = x.copy()
+        for j in range(1, 32):
+            h[j:] += x[:-j] << _np.uint32(j)
+        return h
+    acc = 0
+    out = _np.empty(len(b), _np.uint32)
+    for i in range(len(b)):
+        acc = ((acc << 1) + int(x[i])) & 0xFFFFFFFF
+        out[i] = acc
+    return out

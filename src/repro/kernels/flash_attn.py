@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: forward-only flash attention (prefill path).
+
+§Perf B-cell follow-up: after head padding + head-major layout, the 32k
+prefill memory term is pure score-tensor traffic (~2·B·H·S²·bytes).  A
+flash kernel keeps the S×S scores in VMEM: HBM traffic drops to
+Q+K+V+O (O(S·d)), removing the term entirely.
+
+Design (standard online-softmax flash forward, TPU-tiled):
+  * grid = (BH, nQ, nK), K-block dim innermost ('arbitrary'): the
+    running max m, normalizer l, and unnormalized accumulator acc for
+    one (batch·head, q-block) live in the output blocks across K steps
+    (the Pallas accumulation pattern — same as the MD5 kernel's digest).
+  * causal masking per (q-block, k-block) pair; fully-masked blocks
+    short-circuit via pl.when (upper triangle costs control flow only).
+  * block sizes (BQ × BK) are VMEM-budget parameters: defaults
+    128×512×hd fit comfortably (q 128·hd + kv 2·512·hd + acc 128·hd
+    floats ≈ < 1 MB at hd=128).
+
+Forward-only: serving prefill needs no gradients; training keeps the
+rematerialized blocked-softmax path (layers.gqa_attention).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BQ = 128
+BK = 512
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+                  bq: int, bk: int, scale: float):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # causal: k-block start must not exceed q-block end
+    @pl.when(kj * bk <= qi * bq + bq - 1)
+    def _work():
+        q = q_ref[0, :, :]                                   # [bq, hd]
+        k = k_ref[0, :, :]                                   # [bk, hd]
+        v = v_ref[0, :, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # [bq, bk]
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(k_pos <= q_pos, s, NEG)
+
+        m_prev = m_ref[0, :]                                 # [bq]
+        l_prev = l_ref[0, :]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])                      # [bq, bk]
+        correction = jnp.exp(m_prev - m_new)                 # [bq]
+        l_new = l_prev * correction + jnp.sum(p, axis=1)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)              # [bq, hd]
+        o_ref[0, :, :] = o_ref[0, :, :] * correction[:, None] + pv
+        m_ref[0, :] = m_new
+        l_ref[0, :] = l_new
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
+                        bq: int = BQ, bk: int = BK,
+                        interpret: bool = True) -> jax.Array:
+    """Causal flash attention forward.
+
+    q: [BH, S, hd]; k, v: [BH, Sk, hd] (GQA pre-broadcast of kv heads is
+    the caller's choice — pass q grouped per kv head with repeated k/v
+    refs to avoid materializing the broadcast).
+    Returns [BH, S, hd] (same dtype as q).
+    """
+    BH, S, hd = q.shape
+    Sk = k.shape[1]
+    assert S % bq == 0 and Sk % bk == 0, (S, Sk, bq, bk)
+    scale = hd ** -0.5
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, scale=scale)
+    grid = (BH, S // bq, Sk // bk)
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, hd), jnp.float32),
+            jax.ShapeDtypeStruct((BH, S), jnp.float32),
+            jax.ShapeDtypeStruct((BH, S), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return (o / l[..., None]).astype(q.dtype)

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: parallel Merkle-Damgard MD5 (direct hashing).
+
+TPU adaptation of HashGPU's direct-hashing module (the paper's GPU design
+assigns one *thread* per segment; here one *VPU lane* per segment):
+
+  * layout is word-major — ``data[word, segment]`` — so each MD5 round is
+    a fully vectorized uint32 op across TILE_N segment lanes (8x128 VREG
+    tiling), and the per-chunk message words are contiguous sublane rows;
+  * the grid is (segment_tiles, chunk_tiles) with the chunk dimension
+    innermost and 'arbitrary' (sequential): the digest state accumulates
+    in the output block across chunk steps — the canonical Pallas
+    reduction pattern — so VMEM holds only CHUNK_TILE * 16 message rows,
+    never the whole segment (streaming HBM->VMEM like the paper's staged
+    global->shared-memory pipeline);
+  * MD5 padding (word-aligned messages) is generated in-register via
+    vector selects, so lanes with different message lengths coexist in a
+    tile (the GPU version's per-thread bounds checks, adapted to selects).
+
+Hashing is integer-ALU work: it runs on the VPU (8x128 int32 ops/cycle),
+not the MXU — the roofline for this kernel is VPU-issue-bound, which is
+exactly the paper's 'compute-intensive primitive' premise.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import MD5_INIT, md5_chunk_update
+
+TILE_N = 128           # segments per tile (lane dim)
+CHUNK_TILE = 4         # 64-byte chunks per grid step (16 words each)
+
+
+def _md5_kernel(lens_ref, data_ref, out_ref, *, chunk_tile: int):
+    """Chunks iterate via fori_loop (one 64-round body in the trace/IR
+    regardless of segment length); rounds stay unrolled so message-word
+    indices are static."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        for r, v in enumerate(MD5_INIT):
+            out_ref[r, :] = jnp.full_like(out_ref[r, :], jnp.uint32(v))
+
+    lens = lens_ref[:].astype(jnp.int32)                    # words per lane
+    nchunks = (lens + 18) // 16
+    bits_lo = lens.astype(jnp.uint32) << jnp.uint32(5)
+    bits_hi = lens.astype(jnp.uint32) >> jnp.uint32(27)
+    blk = data_ref[...]                                     # [16*ct, TILE_N]
+    zero = jnp.zeros_like(blk[0])
+
+    def body(cc, state):
+        a, b, c, d = state
+        chunk = j * chunk_tile + cc
+        rows = jax.lax.dynamic_slice_in_dim(blk, cc * 16, 16, axis=0)
+        M = []
+        for jj in range(16):
+            w = chunk * 16 + jj                             # global word
+            raw = rows[jj]
+            is_data = w < lens
+            m = jnp.where(is_data, raw, zero)
+            m = jnp.where((w == lens), jnp.uint32(0x80), m)
+            m = jnp.where((w == nchunks * 16 - 2) & ~is_data & (w != lens),
+                          bits_lo, m)
+            m = jnp.where((w == nchunks * 16 - 1) & ~is_data & (w != lens),
+                          bits_hi, m)
+            M.append(m)
+        na, nb, nc_, nd = md5_chunk_update(a, b, c, d, M)
+        active = chunk < nchunks
+        return (jnp.where(active, na, a), jnp.where(active, nb, b),
+                jnp.where(active, nc_, c), jnp.where(active, nd, d))
+
+    state = (out_ref[0, :], out_ref[1, :], out_ref[2, :], out_ref[3, :])
+    a, b, c, d = jax.lax.fori_loop(0, chunk_tile, body, state)
+    out_ref[0, :] = a
+    out_ref[1, :] = b
+    out_ref[2, :] = c
+    out_ref[3, :] = d
+
+
+def md5_pallas(data_T: jax.Array, lens_w: jax.Array,
+               interpret: bool = True,
+               chunk_tile: int = CHUNK_TILE) -> jax.Array:
+    """MD5 of N word-aligned messages.
+
+    data_T: [max_words_padded, N] uint32 (word-major!), N % TILE_N == 0,
+    max_words_padded % (16 * chunk_tile) == 0; lens_w: [N] int32.
+    ``chunk_tile`` = 64-byte chunks per grid step (VMEM block is
+    16 * chunk_tile * TILE_N words; the wrapper sizes it to bound grid
+    steps for long segments).
+    Returns [4, N] uint32 digest words.
+    """
+    W, N = data_T.shape
+    assert N % TILE_N == 0, N
+    assert W % (16 * chunk_tile) == 0, (W, chunk_tile)
+    n_seg_tiles = N // TILE_N
+    n_chunk_tiles = W // (16 * chunk_tile)
+
+    kernel = functools.partial(_md5_kernel, chunk_tile=chunk_tile)
+    grid = (n_seg_tiles, n_chunk_tiles)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_N,), lambda i, j: (i,)),
+            pl.BlockSpec((16 * chunk_tile, TILE_N), lambda i, j: (j, i)),
+        ],
+        out_specs=pl.BlockSpec((4, TILE_N), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((4, N), jnp.uint32),
+        interpret=interpret,
+    )(lens_w, data_T)

@@ -1,0 +1,189 @@
+"""jit'd host-facing wrappers around the Pallas hashing kernels.
+
+All APIs take/return numpy-friendly arrays; padding, word packing, byte-
+phase strip construction and output interleaving live here so the kernels
+stay shape-regular.  ``interpret=True`` (the CPU default here) executes
+the kernel bodies in Python via the Pallas interpreter; on TPU the same
+calls lower to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import gear as gear_k
+from repro.kernels import md5 as md5_k
+from repro.kernels import sliding_md5 as slide_k
+
+# --------------------------------------------------------------------------
+# direct hashing
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _direct_hash_words(data: jax.Array, lens_w: jax.Array,
+                       interpret: bool = True) -> jax.Array:
+    """data: [N, W] uint32; lens_w: [N] int32 -> [N, 4] uint32 digests."""
+    N, W = data.shape
+    n_pad = (-N) % md5_k.TILE_N
+    # bound the chunk grid to ~32 steps for long segments (grid dispatch
+    # dominates on the interpreter; on TPU this is simply a larger VMEM
+    # message block, capped at 16*128*TILE_N words ~ 1 MB)
+    n_chunks = (W + 3 + 15) // 16
+    chunk_tile = min(512, max(md5_k.CHUNK_TILE, -(-n_chunks // 8)))
+    w_pad = (-(W + 3)) % (16 * chunk_tile) + 3
+    data = jnp.pad(data, ((0, n_pad), (0, w_pad)))
+    lens = jnp.pad(lens_w.astype(jnp.int32), (0, n_pad))
+    dig = md5_k.md5_pallas(data.T, lens, interpret=interpret,
+                           chunk_tile=chunk_tile)              # [4, Npad]
+    return dig.T[:N]
+
+
+def direct_hash(segments: np.ndarray, lens_bytes=None,
+                interpret: bool = True) -> np.ndarray:
+    """MD5 digests of N word-aligned segments.
+
+    segments: [N, seg_bytes/4] uint32 (or uint8 [N, seg_bytes]);
+    lens_bytes: optional [N] actual byte lengths (multiples of 4).
+    Returns [N, 16] uint8 digests (hashlib-identical).
+    """
+    segments = np.asarray(segments)
+    if segments.dtype == np.uint8:
+        assert segments.shape[1] % 4 == 0
+        segments = segments.view("<u4") if segments.flags.c_contiguous \
+            else np.ascontiguousarray(segments).view("<u4")
+    N, W = segments.shape
+    if lens_bytes is None:
+        lens_w = np.full((N,), W, np.int32)
+    else:
+        lens_bytes = np.asarray(lens_bytes)
+        assert np.all(lens_bytes % 4 == 0)
+        lens_w = (lens_bytes // 4).astype(np.int32)
+    dig = np.asarray(_direct_hash_words(jnp.asarray(segments),
+                                        jnp.asarray(lens_w),
+                                        interpret=interpret))
+    return dig.astype("<u4").view(np.uint8).reshape(N, 16)
+
+
+def hash_blocks(data: bytes, block_bytes: int,
+                interpret: bool = True) -> Tuple[np.ndarray, bytes]:
+    """Fixed-size-block direct hashing of a buffer (paper's fixed-block
+    content addressability).  Returns ([n_blocks, 16] digests, final
+    digest bytes = md5 over the concatenated digests, computed host-side
+    exactly like the paper's CPU post-processing stage)."""
+    import hashlib
+    n = (len(data) + block_bytes - 1) // block_bytes
+    padded = data + b"\x00" * (n * block_bytes - len(data))
+    arr = np.frombuffer(padded, np.uint8).reshape(n, block_bytes)
+    lens = np.full((n,), block_bytes, np.int64)
+    lens[-1] = len(data) - (n - 1) * block_bytes
+    lens = ((lens + 3) // 4 * 4)                  # word-align tail
+    digs = direct_hash(arr, lens, interpret=interpret)
+    final = hashlib.md5(digs.tobytes()).digest()
+    return digs, final
+
+
+# --------------------------------------------------------------------------
+# sliding-window MD5 (paper-faithful CDC)
+# --------------------------------------------------------------------------
+def _byte_phase_strips(words: jax.Array, phases: Tuple[int, ...],
+                       pad_words: int) -> jax.Array:
+    """Rotated word streams: strip r's word k covers bytes 4k+r..4k+r+3."""
+    nxt = jnp.concatenate([words[1:], jnp.zeros((1,), jnp.uint32)])
+    strips = []
+    for r in phases:
+        if r == 0:
+            s = words
+        else:
+            s = (words >> jnp.uint32(8 * r)) | (nxt << jnp.uint32(32 - 8 * r))
+        strips.append(jnp.pad(s, (0, pad_words)))
+    return jnp.stack(strips)
+
+
+def _pick_tile(L: int, base: int) -> int:
+    """Tile width bounding grid steps to ~64 (VMEM stays < ~0.5 MB/input
+    block; interpret mode traces the grid as a Python loop, so step count
+    dominates trace time on CPU)."""
+    t = base
+    while L // t > 64 and t < (1 << 15):
+        t *= 2
+    return t
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("w_words", "phases", "interpret"))
+def _sliding_hash_words(words: jax.Array, w_words: int,
+                        phases: Tuple[int, ...],
+                        interpret: bool = True) -> jax.Array:
+    L = words.shape[0]
+    T = _pick_tile(L, slide_k.TILE_W)
+    w_cap = ((L + T - 1) // T) * T
+    pad = w_cap - L + T
+    strips = _byte_phase_strips(words, phases, pad)          # [R, w_cap+T]
+    out = slide_k.sliding_md5_pallas(strips, w_words,
+                                     interpret=interpret,
+                                     tile=T)                 # [R, 4, w_cap]
+    return out[:, 0, :]                                      # digest word a
+
+
+def sliding_window_hash(data: bytes | np.ndarray, window: int = 48,
+                        stride: int = 1,
+                        interpret: bool = True) -> np.ndarray:
+    """MD5 (digest word 'a') of every ``window``-byte window at byte
+    offsets 0, stride, 2*stride, ...  window % 4 == 0, window <= 52;
+    stride in {1, 2, 4}.  Returns [n_off] uint32."""
+    assert window % 4 == 0 and window <= 52 and stride in (1, 2, 4)
+    buf = np.frombuffer(data, np.uint8) if isinstance(data, (bytes,
+                                                             bytearray)) \
+        else np.asarray(data, np.uint8)
+    L = len(buf)
+    n_off = (L - window) // stride + 1
+    pad = (-L) % 4
+    words = jnp.asarray(np.pad(buf, (0, pad)).view("<u4"))
+    phases = tuple(range(0, 4, stride))
+    out = np.asarray(_sliding_hash_words(words, window // 4, phases,
+                                         interpret=interpret))  # [R, Wc]
+    # interleave: offset o = 4q + phases[r]  ->  out[r, q]
+    R, Wc = out.shape
+    inter = np.empty((Wc * R,), np.uint32)
+    for i, r in enumerate(phases):
+        inter[i::R] = out[i]
+    return inter[:n_off]
+
+
+# --------------------------------------------------------------------------
+# gear rolling hash (beyond-paper CDC)
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("interpret", "version"))
+def _gear_hash_words(words: jax.Array, interpret: bool = True,
+                     version: int = 1) -> jax.Array:
+    L = words.shape[0]
+    T = _pick_tile(L, gear_k.TILE_W)
+    w_cap = ((L + T - 1) // T) * T
+    strip = jnp.pad(words, (T, w_cap - L))[None, :]          # lead history 0s
+    out = gear_k.gear_pallas(strip, interpret=interpret,
+                             version=version, tile=T)        # [4, w_cap]
+    return out
+
+
+def gear_hash(data: bytes | np.ndarray, interpret: bool = True,
+              version: int = 1) -> np.ndarray:
+    """Windowed gear hash at every byte position.  Returns [L] uint32.
+    Positions < 32 differ from ref (zero-history convention) — chunking
+    never places boundaries inside the minimum chunk size anyway.
+    ``version=2`` selects the log-doubling kernel (§Perf C2) — identical
+    outputs, ~3x fewer VPU ops."""
+    buf = np.frombuffer(data, np.uint8) if isinstance(data, (bytes,
+                                                             bytearray)) \
+        else np.asarray(data, np.uint8)
+    L = len(buf)
+    pad = (-L) % 4
+    words = jnp.asarray(np.pad(buf, (0, pad)).view("<u4"))
+    out = np.asarray(_gear_hash_words(words, interpret=interpret,
+                                      version=version))
+    h = out.T.reshape(-1)                                    # 4q + r order
+    return h[:L]

@@ -1,0 +1,189 @@
+"""Pure-jnp oracles for the hashing kernels.
+
+These are the correctness references for the Pallas kernels (which are
+additionally anchored to ``hashlib.md5`` ground truth in tests).
+
+Alignment convention (TPU adaptation, documented in DESIGN.md): all hashed
+segments are 4-byte (word) aligned — the storage layer aligns chunk
+boundaries to 4 B, which costs nothing in dedup quality and lets every
+kernel operate on uint32 words (the natural VPU element).  MD5 padding for
+word-aligned messages occupies whole words: 0x00000080 then zeros then the
+64-bit little-endian bit length.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------
+# MD5 constants
+# --------------------------------------------------------------------------
+MD5_K = tuple(int(abs(math.sin(i + 1)) * 2 ** 32) & 0xFFFFFFFF
+              for i in range(64))
+MD5_S = (7, 12, 17, 22) * 4 + (5, 9, 14, 20) * 4 + (4, 11, 16, 23) * 4 \
+    + (6, 10, 15, 21) * 4
+MD5_INIT = (0x67452301, 0xEFCDAB89, 0x98BADCFE, 0x10325476)
+
+
+def md5_g(i: int) -> int:
+    if i < 16:
+        return i
+    if i < 32:
+        return (5 * i + 1) % 16
+    if i < 48:
+        return (3 * i + 5) % 16
+    return (7 * i) % 16
+
+
+def _rotl(x, s):
+    return (x << jnp.uint32(s)) | (x >> jnp.uint32(32 - s))
+
+
+def md5_chunk_update(a, b, c, d, M):
+    """One 64-round MD5 chunk update.  a..d: uint32 arrays; M: [16, ...]."""
+    a0, b0, c0, d0 = a, b, c, d
+    for i in range(64):
+        if i < 16:
+            f = (b & c) | (~b & d)
+        elif i < 32:
+            f = (d & b) | (~d & c)
+        elif i < 48:
+            f = b ^ c ^ d
+        else:
+            f = c ^ (b | ~d)
+        f = f + a + jnp.uint32(MD5_K[i]) + M[md5_g(i)]
+        a = d
+        d = c
+        c = b
+        b = b + _rotl(f, MD5_S[i])
+    return a0 + a, b0 + b, c0 + c, d0 + d
+
+
+def md5_words_ref(data: jax.Array, lens_w: jax.Array) -> jax.Array:
+    """MD5 of N word-aligned messages.
+
+    data: [N, max_words] uint32 (little-endian words of the message,
+    zero-padded); lens_w: [N] int32 message lengths in words.
+    Returns [N, 4] uint32 (a, b, c, d) — the standard digest read as four
+    little-endian words.
+    """
+    data = data.astype(jnp.uint32)
+    N, max_words = data.shape
+    max_chunks = (max_words + 3 + 15) // 16
+    nchunks = (lens_w + 3 + 15) // 16                       # [N]
+    bits_lo = (lens_w.astype(jnp.uint32) << jnp.uint32(5))
+    bits_hi = (lens_w.astype(jnp.uint32) >> jnp.uint32(27))
+
+    a = jnp.full((N,), MD5_INIT[0], jnp.uint32)
+    b = jnp.full((N,), MD5_INIT[1], jnp.uint32)
+    c = jnp.full((N,), MD5_INIT[2], jnp.uint32)
+    d = jnp.full((N,), MD5_INIT[3], jnp.uint32)
+
+    def padded_word(chunk_idx, j):
+        w = chunk_idx * 16 + j                               # global word idx
+        raw = data[:, w] if w < max_words else jnp.zeros((N,), jnp.uint32)
+        is_data = w < lens_w
+        is_pad80 = w == lens_w
+        is_blo = w == (nchunks * 16 - 2)
+        is_bhi = w == (nchunks * 16 - 1)
+        out = jnp.where(is_data, raw, jnp.uint32(0))
+        out = jnp.where(is_pad80 & ~is_data, jnp.uint32(0x80), out)
+        out = jnp.where(is_blo & ~is_data & ~is_pad80, bits_lo, out)
+        out = jnp.where(is_bhi & ~is_data & ~is_pad80, bits_hi, out)
+        return out
+
+    for chunk in range(max_chunks):
+        M = [padded_word(chunk, j) for j in range(16)]
+        na, nb, nc_, nd = md5_chunk_update(a, b, c, d, M)
+        active = chunk < nchunks
+        a = jnp.where(active, na, a)
+        b = jnp.where(active, nb, b)
+        c = jnp.where(active, nc_, c)
+        d = jnp.where(active, nd, d)
+    return jnp.stack([a, b, c, d], axis=1)
+
+
+# --------------------------------------------------------------------------
+# helpers to go between bytes and word arrays
+# --------------------------------------------------------------------------
+def bytes_to_words(buf: bytes) -> np.ndarray:
+    assert len(buf) % 4 == 0, "word-aligned input required"
+    return np.frombuffer(buf, dtype="<u4").copy()
+
+
+def digest_words_to_bytes(dig: np.ndarray) -> bytes:
+    return np.asarray(dig, dtype="<u4").tobytes()
+
+
+def md5_hex_ref(buf: bytes) -> str:
+    """MD5 hex digest of a word-aligned byte string (matches hashlib)."""
+    w = bytes_to_words(buf)
+    data = jnp.asarray(w)[None, :] if len(w) else \
+        jnp.zeros((1, 1), jnp.uint32)
+    lens = jnp.asarray([len(w)], jnp.int32)
+    dig = md5_words_ref(data, lens)
+    return digest_words_to_bytes(np.asarray(dig[0])).hex()
+
+
+# --------------------------------------------------------------------------
+# sliding-window MD5 (content-based chunking, paper-faithful primitive)
+# --------------------------------------------------------------------------
+def sliding_md5_ref(data_bytes: jax.Array, window: int,
+                    stride: int = 1) -> jax.Array:
+    """MD5 digest word 'a' of every window of ``window`` bytes.
+
+    data_bytes: [L] uint8; window must be a multiple of 4 and <= 52 so the
+    padded message fits one MD5 chunk.  Returns [n_off] uint32 where
+    n_off = (L - window)//stride + 1.
+    """
+    assert window % 4 == 0 and window <= 52
+    L = data_bytes.shape[0]
+    n_off = (L - window) // stride + 1
+    offs = jnp.arange(n_off, dtype=jnp.int32) * stride      # [n_off]
+    idx = offs[:, None] + jnp.arange(window, dtype=jnp.int32)[None, :]
+    wins = data_bytes[idx].astype(jnp.uint32)               # [n_off, window]
+    # pack LE words
+    wins = wins.reshape(n_off, window // 4, 4)
+    words = (wins[..., 0] | (wins[..., 1] << 8) | (wins[..., 2] << 16)
+             | (wins[..., 3] << 24))                        # [n_off, w/4]
+    lens = jnp.full((n_off,), window // 4, jnp.int32)
+    dig = md5_words_ref(words, lens)
+    return dig[:, 0]
+
+
+# --------------------------------------------------------------------------
+# gear rolling hash (beyond-paper TPU-native CDC primitive)
+# --------------------------------------------------------------------------
+GEAR_WINDOW = 32
+
+
+def mix32(x: jax.Array) -> jax.Array:
+    """murmur3 fmix32 — table-free 'gear' function of a byte value."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> jnp.uint32(13))
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def gear_ref(data_bytes: jax.Array) -> jax.Array:
+    """Windowed gear hash at every byte position.
+
+    h_i = sum_{j=0}^{31} mix32(b_{i-j}) << j   (b_{<0} treated as 0)
+    data_bytes: [L] uint8 -> [L] uint32.  Identical chunking behaviour to
+    the sequential FastCDC gear recurrence h = (h << 1) + gear[b] (bits
+    shifted out beyond 32 drop in both forms).
+    """
+    g = mix32(data_bytes + jnp.uint32(1))                   # avoid mix(0)=0
+    L = g.shape[0]
+    h = jnp.zeros((L,), jnp.uint32)
+    for j in range(GEAR_WINDOW):
+        shifted = jnp.pad(g, (j, 0))[:L] << jnp.uint32(j)
+        h = h + shifted
+    return h

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: sliding-window MD5 (paper-faithful CDC primitive).
+
+HashGPU's content-based-chunking module hashes EVERY overlapping window of
+the stream (LBFS-style) — the most compute-intensive primitive in the
+paper (7-51 MB/s on a 2008 CPU; the GPU offload wins up to 190x).
+
+TPU adaptation: one VPU lane per window offset.  A window of <= 52 bytes
+pads to a single 64-byte MD5 chunk, so each offset costs exactly 64
+vectorized rounds.  Overlapping windows cannot be expressed as disjoint
+BlockSpec tiles, so the strip is passed TWICE with index maps (i) and
+(i+1); the kernel concatenates the two TILE-word blocks and takes the 12
+(window/4) shifted slices — the TPU analogue of HashGPU's shared-memory
+workspace holding the window neighbourhood.
+
+Byte-granularity offsets (stride 1, as in LBFS/the paper) are handled in
+ops.py by hashing 4 byte-rotated word streams — each stream is
+word-strided, which keeps every lane's message word-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import MD5_INIT, md5_chunk_update
+
+TILE_W = 512           # window offsets per tile (lane dim)
+
+
+def _sliding_kernel(cur_ref, nxt_ref, out_ref, *, w_words: int):
+    full = jnp.concatenate([cur_ref[0, :], nxt_ref[0, :]])   # [2*TILE]
+    T = cur_ref.shape[1]
+    M = []
+    for jj in range(16):
+        if jj < w_words:
+            M.append(jax.lax.dynamic_slice(full, (jj,), (T,)))
+        elif jj == w_words:
+            M.append(jnp.full((T,), 0x80, jnp.uint32))
+        elif jj == 14:
+            M.append(jnp.full((T,), w_words * 32, jnp.uint32))
+        else:
+            M.append(jnp.zeros((T,), jnp.uint32))
+    a = jnp.full((T,), MD5_INIT[0], jnp.uint32)
+    b = jnp.full((T,), MD5_INIT[1], jnp.uint32)
+    c = jnp.full((T,), MD5_INIT[2], jnp.uint32)
+    d = jnp.full((T,), MD5_INIT[3], jnp.uint32)
+    a, b, c, d = md5_chunk_update(a, b, c, d, M)
+    out_ref[0, 0, :] = a
+    out_ref[0, 1, :] = b
+    out_ref[0, 2, :] = c
+    out_ref[0, 3, :] = d
+
+
+def sliding_md5_pallas(strips: jax.Array, w_words: int,
+                       interpret: bool = True,
+                       tile: int = TILE_W) -> jax.Array:
+    """MD5 of every word-offset window over R parallel strips.
+
+    strips: [R, W + TILE_W] uint32 — R independent word streams, each
+    padded with TILE_W trailing words; window is ``w_words`` words
+    (w_words <= 13 so the padded message is a single chunk).
+    Returns [R, 4, W] uint32: digest words for the window starting at each
+    word offset of each strip.
+    """
+    R, Wp = strips.shape
+    W = Wp - tile
+    assert W % tile == 0, (W, tile)
+    assert 0 < w_words <= 13
+    n_tiles = W // tile
+    kernel = functools.partial(_sliding_kernel, w_words=w_words)
+    out = pl.pallas_call(
+        kernel,
+        grid=(R, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda r, i: (r, i)),
+            pl.BlockSpec((1, tile), lambda r, i: (r, i + 1)),
+        ],
+        out_specs=pl.BlockSpec((1, 4, tile), lambda r, i: (r, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((R, 4, W), jnp.uint32),
+        interpret=interpret,
+    )(strips, strips)
+    return out

@@ -1,0 +1,1 @@
+from repro.models.model import LMModel, build_model  # noqa: F401

@@ -1,0 +1,178 @@
+"""Core transformer layers: RMSNorm, RoPE, GQA attention, MLPs.
+
+All functions are pure; parameters are plain pytrees (dicts of arrays).
+Attention is implemented *blocked* (scan over query blocks with an
+in-block causal mask) so the S x S score tensor is never materialised at
+32k context — the memory roofline term reflects O(S * block) residency
+rather than O(S^2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# Query-block length for blocked attention.  4096-token training shapes use
+# a single block; 32k prefill scans 8 blocks of 4k.
+DEFAULT_Q_BLOCK = 2048
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)                       # [hd/2]
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                          # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]                    # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+def _attend_block(qh, kh, vh, q_pos, k_pos, swa_window, softcap,
+                  score_dtype=jnp.float32):
+    """Softmax attention for one query block against a KV prefix.
+
+    Head-major layout (§Perf B3): the score dot emits [B,K,G,T,S]
+    directly in its consumer's layout, so no S-by-S-sized transpose
+    copies materialize (the token-major form cost 3 score-sized layout
+    copies per block on the lowered pipeline).
+    qh: [B, K, G, Tq, hd]; kh, vh: [B, K, Tk, hd]
+    q_pos: [Tq], k_pos: [Tk] absolute positions (causal / SWA mask)
+    ``score_dtype``: storage dtype of the scores (bf16 halves score HBM
+    traffic, §Perf B2); softmax still computes in fp32.
+    returns [B, K, G, Tq, hd]
+    """
+    scale = qh.shape[-1] ** -0.5
+    scores = jnp.einsum("bkgth,bksh->bkgts", qh, kh,
+                        preferred_element_type=score_dtype)
+    scores = (scores * jnp.asarray(scale, score_dtype))
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    mask = k_pos[None, :] <= q_pos[:, None]                # causal  [Tq, Tk]
+    if swa_window:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < swa_window
+    scores = jnp.where(mask[None, None, None], scores,
+                       jnp.asarray(-1e30, score_dtype))
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1
+                           ).astype(qh.dtype)
+    return jnp.einsum("bkgts,bksh->bkgth", probs, vh)
+
+
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  q_positions: jax.Array, k_positions: jax.Array,
+                  swa_window: int = 0, softcap: float = 0.0,
+                  q_block: int = DEFAULT_Q_BLOCK,
+                  score_dtype=jnp.float32) -> jax.Array:
+    """Blocked causal GQA attention.
+
+    q: [B, S, H, hd]; k, v: [B, Sk, K, hd] with H = K * G.
+    Inputs transpose once to head-major (O(S*d), negligible vs scores),
+    then a scan over query blocks computes softmax against the full
+    (masked) KV — O(S * q_block) live memory instead of O(S^2).
+    """
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qh = q.reshape(B, S, K, G, hd).transpose(0, 2, 3, 1, 4)  # [B,K,G,S,hd]
+    kh = k.transpose(0, 2, 1, 3)                             # [B,K,S,hd]
+    vh = v.transpose(0, 2, 1, 3)
+    if S <= q_block:
+        out = _attend_block(qh, kh, vh, q_positions, k_positions,
+                            swa_window, softcap, score_dtype)
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd)
+
+    assert S % q_block == 0, (S, q_block)
+    n_blocks = S // q_block
+    qs = qh.reshape(B, K, G, n_blocks, q_block, hd).transpose(
+        3, 0, 1, 2, 4, 5)                                    # [nb,B,K,G,qb,hd]
+    qp = q_positions.reshape(n_blocks, q_block)
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def body(_, blk):
+        qb, qpb = blk
+        ob = _attend_block(qb, kh, vh, qpb, k_positions, swa_window,
+                           softcap, score_dtype)
+        return None, ob
+
+    _, out = jax.lax.scan(body, None, (qs, qp))              # [nb,B,K,G,qb,hd]
+    out = out.transpose(1, 0, 4, 2, 3, 5)                    # [B,nb,qb,K,G,hd]
+    return out.reshape(B, S, H, hd)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     slot_positions: jax.Array, cur_pos: jax.Array,
+                     softcap: float = 0.0) -> jax.Array:
+    """Single-token attention against a (possibly ring-buffer) KV cache.
+
+    q: [B, 1, H, hd]; caches: [B, C, K, hd]; slot_positions: [C] or
+    [B, C] absolute position held by each cache slot (-1 or > cur_pos =>
+    masked out); cur_pos: scalar or [B] (ragged continuous batching).
+    """
+    B, _, H, hd = q.shape
+    K = k_cache.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    sp = slot_positions if slot_positions.ndim == 2 \
+        else slot_positions[None, :]                       # [B or 1, C]
+    cp = cur_pos if jnp.ndim(cur_pos) else cur_pos[None]
+    cp = jnp.reshape(cp, (-1, 1))                          # [B or 1, 1]
+    valid = (sp >= 0) & (sp <= cp)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs, v_cache)
+    return out.reshape(B, 1, H, hd)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+def mlp(x: jax.Array, p: dict, mlp_type: str) -> jax.Array:
+    dtype = x.dtype
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["w1"].astype(dtype)) * (x @ p["w3"].astype(dtype))
+    elif mlp_type == "gelu":
+        h = jax.nn.gelu(x @ p["w1"].astype(dtype))
+    else:
+        raise ValueError(mlp_type)
+    return h @ p["w2"].astype(dtype)
+
+
+def mlp_param_shapes(d: int, f: int, mlp_type: str) -> dict:
+    shapes = {"w1": (d, f), "w2": (f, d)}
+    if mlp_type == "swiglu":
+        shapes["w3"] = (d, f)
+    return shapes

@@ -1,0 +1,107 @@
+"""Mixture-of-Experts layer (GShard/GSPMD-style capacity dispatch).
+
+Design notes (TPU adaptation):
+  * Tokens are processed in *groups* (contiguous spans of the sequence).
+    Dispatch/combine are one-hot einsums — MXU-friendly matmuls, the
+    canonical TPU MoE formulation (GShard, Switch, GLaM).
+  * Dispatch FLOPs per token are 2 * group_size * top_k * capacity_factor
+    * d_model, independent of the expert count, so a 384-expert layer
+    (kimi-k2) pays the same dispatch overhead as an 8-expert one.
+  * The stacked expert tensors [E, d, f] shard either on E ('expert' mode,
+    E >= model-axis) or on f ('ffn' mode, E < model-axis, e.g. Mixtral).
+  * Capacity overflow drops tokens (residual passes through), standard for
+    capacity-based TPU MoE training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+
+# tokens per dispatch group; small groups bound the one-hot dispatch cost.
+GROUP_SIZE = 512
+
+
+def moe_param_shapes(d: int, cfg: MoEConfig, mlp_type: str) -> dict:
+    f = cfg.d_ff_expert
+    n_mats = {"w1": (cfg.num_experts, d, f), "w2": (cfg.num_experts, f, d)}
+    if mlp_type == "swiglu":
+        n_mats["w3"] = (cfg.num_experts, d, f)
+    shapes = {"router": (d, cfg.num_experts), **n_mats}
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        shapes["shared_w1"] = (d, fs)
+        shapes["shared_w2"] = (fs, d)
+        if mlp_type == "swiglu":
+            shapes["shared_w3"] = (d, fs)
+    return shapes
+
+
+def _capacity(group: int, cfg: MoEConfig) -> int:
+    cap = int(group * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    cap = max(cap, cfg.top_k)
+    return min(cap, group)
+
+
+def moe_mlp(x: jax.Array, p: dict, cfg: MoEConfig, mlp_type: str) -> tuple:
+    """x: [B, S, d] -> ([B, S, d], aux_loss scalar)."""
+    B, S, d = x.shape
+    dtype = x.dtype
+    group = min(GROUP_SIZE, S)
+    assert S % group == 0, (S, group)
+    G = B * (S // group)
+    xg = x.reshape(G, group, d)
+
+    router = p["router"].astype(jnp.float32)
+    logits = xg.astype(jnp.float32) @ router               # [G, g, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, cfg.top_k)  # [G, g, k]
+    gate_vals = gate_vals / jnp.clip(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    E = cfg.num_experts
+    C = _capacity(group, cfg)
+
+    # position-in-expert via cumulative sum over the k one-hots in sequence
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)  # [G, g, k, E]
+    flat = onehot.reshape(G, group * cfg.top_k, E)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat          # [G, g*k, E]
+    pos_in_expert = jnp.sum(pos_in_expert * flat, axis=-1)   # [G, g*k]
+    pos_in_expert = pos_in_expert.reshape(G, group, cfg.top_k)
+    keep = pos_in_expert < C
+
+    # dispatch tensor [G, g, E, C]
+    cap_onehot = jax.nn.one_hot(pos_in_expert, C, dtype=dtype)  # [G,g,k,C]
+    disp = jnp.einsum("sgke,sgkc->sgec",
+                      onehot.astype(dtype) * keep[..., None].astype(dtype),
+                      cap_onehot)
+    comb = jnp.einsum("sgk,sgke,sgkc->sgec", gate_vals.astype(dtype),
+                      onehot.astype(dtype) * keep[..., None].astype(dtype),
+                      cap_onehot)
+
+    xe = jnp.einsum("sgec,sgd->secd", disp, xg)              # [G, E, C, d]
+    w1 = p["w1"].astype(dtype)
+    w2 = p["w2"].astype(dtype)
+    if mlp_type == "swiglu":
+        w3 = p["w3"].astype(dtype)
+        h = jax.nn.silu(jnp.einsum("secd,edf->secf", xe, w1)) \
+            * jnp.einsum("secd,edf->secf", xe, w3)
+    else:
+        h = jax.nn.gelu(jnp.einsum("secd,edf->secf", xe, w1))
+    ye = jnp.einsum("secf,efd->secd", h, w2)                 # [G, E, C, d]
+    y = jnp.einsum("sgec,secd->sgd", comb, ye)               # [G, g, d]
+    y = y.reshape(B, S, d)
+
+    if cfg.num_shared_experts:
+        sh = {"w1": p["shared_w1"], "w2": p["shared_w2"]}
+        if mlp_type == "swiglu":
+            sh["w3"] = p["shared_w3"]
+        from repro.models.layers import mlp
+        y = y + mlp(x, sh, mlp_type)
+
+    # load-balancing auxiliary loss (Switch-style)
+    density = jnp.mean(onehot[..., 0, :].astype(jnp.float32), axis=1)  # [G,E]
+    density_prob = jnp.mean(probs, axis=1)                             # [G,E]
+    aux = jnp.mean(jnp.sum(density * density_prob, axis=-1)) * E
+    return y, aux

@@ -1,0 +1,166 @@
+"""Partition-spec rules: map parameter paths to PartitionSpecs.
+
+Baseline layout (recorded in EXPERIMENTS.md §Roofline as *baseline*):
+  * megatron-style tensor parallelism on the 'model' axis: attention heads,
+    FFN hidden dim, MoE expert dim (or expert-FFN dim when E < axis), SSM
+    head channels, vocab dim of embed/head;
+  * pure data parallelism over the ('pod', 'data') axes for the batch;
+  * a dim is sharded only when divisible by the model-axis size (small KV
+    heads / odd vocab sizes are replicated — noted per arch).
+
+ZeRO-1 optimizer-state sharding is layered on top by
+``zero1_spec`` (a §Perf hillclimb lever).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    mesh: Mesh
+    dp_axes: Tuple[str, ...]       # ('data',) or ('pod', 'data')
+    model_axis: str = "model"
+    # §Perf lever: shard head/ffn dims on the model axis even when not
+    # divisible (GSPMD pads) — e.g. minicpm's 36 heads over 16 devices.
+    # Baseline False: replicate instead (megatron convention).
+    uneven: bool = False
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+    def named(self, *spec) -> NamedSharding:
+        return NamedSharding(self.mesh, P(*spec))
+
+
+def constrain(x, ctx: Optional[ShardCtx], *spec):
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, ctx.named(*spec))
+
+
+def _div(n: int, k: int) -> bool:
+    return n % k == 0
+
+
+def param_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
+               cfg: ArchConfig, model_size: int,
+               uneven: bool = False) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    ``path`` is the tuple of dict keys; stacked block leaves have a
+    leading n_superblock dim which is never sharded.
+    """
+    name = path[-1]
+    m = "model"
+    stacked = path[0] == "blocks"
+
+    def wrap(spec_tail: tuple) -> P:
+        if stacked:
+            return P(None, *spec_tail)
+        return P(*spec_tail)
+
+    dims = shape[1:] if stacked else shape
+
+    if name == "embed":
+        return P(m, None) if _div(shape[0], model_size) else P(None, None)
+    if name == "head":
+        return P(None, m) if _div(shape[1], model_size) else P(None, None)
+    if name in ("final_norm", "norm1", "norm2", "gate_norm_scale"):
+        return wrap((None,) * len(dims))
+
+    # attention.  With `uneven`, head dims shard with GSPMD padding
+    # whenever there are at least model_size heads (hillclimb B1).
+    def head_ok(n):
+        return _div(n, model_size) or (uneven and n >= model_size)
+
+    if name == "wq":
+        return wrap((None, m if head_ok(dims[1]) else None, None))
+    if name in ("wk", "wv"):
+        return wrap((None, m if head_ok(dims[1]) else None, None))
+    if name == "wo":
+        return wrap((m if head_ok(dims[0]) else None, None, None))
+
+    # dense / shared-expert MLP
+    if name in ("w1", "w3", "shared_w1", "shared_w3") and len(dims) == 2:
+        return wrap((None, m if _div(dims[1], model_size) else None))
+    if name in ("w2", "shared_w2") and len(dims) == 2:
+        return wrap((m if _div(dims[0], model_size) else None, None))
+
+    # MoE expert-stacked tensors [E, d, f] / [E, f, d]
+    if name in ("w1", "w3") and len(dims) == 3:
+        if cfg.moe and cfg.moe.shard_mode == "expert" \
+                and _div(dims[0], model_size):
+            return wrap((m, None, None))
+        return wrap((None, None, m if _div(dims[2], model_size) else None))
+    if name == "w2" and len(dims) == 3:
+        if cfg.moe and cfg.moe.shard_mode == "expert" \
+                and _div(dims[0], model_size):
+            return wrap((m, None, None))
+        return wrap((None, m if _div(dims[1], model_size) else None, None))
+    if name == "router":
+        return wrap((None, None))
+
+    # SSM
+    if name in ("z_proj", "x_proj", "dt_proj"):
+        return wrap((None, m if _div(dims[1], model_size) else None))
+    if name == "out_proj":
+        return wrap((m if _div(dims[0], model_size) else None, None))
+    if name in ("B_proj", "C_proj"):
+        return wrap((None, None))
+    if name in ("conv_x_w",):
+        return wrap((None, m if _div(dims[1], model_size) else None))
+    if name in ("conv_x_b", "gate_norm", "A_log", "D", "dt_bias"):
+        return wrap((m if _div(dims[0], model_size) else None,))
+    if name in ("conv_B_w", "conv_C_w"):
+        return wrap((None, None))
+    if name in ("conv_B_b", "conv_C_b"):
+        return wrap((None,))
+
+    # default: replicate
+    return wrap((None,) * len(dims))
+
+
+def param_specs(cfg: ArchConfig, shapes_tree, ctx: ShardCtx):
+    """Tree of PartitionSpec matching a tree of ShapeDtypeStruct."""
+    def fn(path, leaf):
+        keys = tuple(
+            k.key if hasattr(k, "key") else str(k) for k in path)
+        return param_spec(keys, leaf.shape, cfg, ctx.model_size,
+                          uneven=ctx.uneven)
+    return jax.tree_util.tree_map_with_path(fn, shapes_tree)
+
+
+def zero1_spec(spec: P, shape: Tuple[int, ...], dp_axes: Tuple[str, ...],
+               dp_size: int) -> P:
+    """Extend a param spec by sharding the first free divisible dim over
+    the data axes (ZeRO-1 optimizer-state sharding)."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (p, n) in enumerate(zip(parts, shape)):
+        if p is None and n % dp_size == 0 and n >= dp_size:
+            parts[i] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+            return P(*parts)
+    return spec
+
+
+def cache_spec(kind: str, ctx: ShardCtx, batch: int) -> P:
+    """Decode-cache sharding.  KV caches shard batch over dp and the
+    sequence (slot) dim over the model axis (flash-decoding layout —
+    robust to tiny GQA head counts); SSM states shard heads on model."""
+    dp = ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]
+    if kind == "kv":          # [B, C, K, hd]
+        return P(dp, ctx.model_axis, None, None) if batch > 1 \
+            else P(None, ctx.model_axis, None, None)
+    if kind == "ssm":         # [B, h, n, p]
+        return P(dp, ctx.model_axis, None, None) if batch > 1 \
+            else P(None, ctx.model_axis, None, None)
+    if kind == "conv":        # [B, cw-1, C]
+        return P(dp, None, None) if batch > 1 else P(None, None, None)
+    raise ValueError(kind)

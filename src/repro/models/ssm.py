@@ -1,0 +1,233 @@
+"""Mamba-2 (SSD, state-space duality) mixer in pure JAX.
+
+Implements the chunked SSD algorithm [arXiv:2405.21060]: the sequence is
+split into chunks; within a chunk the quadratic (attention-dual) form is
+used, across chunks a linear recurrence on the [heads, state, head_dim]
+SSM state is carried by ``lax.scan``.  Decode is an O(1) state update —
+this is what makes ``long_500k`` tractable for SSM/hybrid archs.
+
+TP layout note: the original Mamba-2 uses one fused ``in_proj`` producing
+the concatenated (z, x, B, C, dt).  Here the projection (and the depthwise
+conv, which factors exactly across channel groups) is split per component
+so each piece shards cleanly on the model axis: z/x/dt project onto
+head-sharded channels; the small B/C (state) projections are replicated.
+This is mathematically identical to the fused form.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+
+
+def ssm_dims(d_model: int, cfg: SSMConfig) -> dict:
+    d_in = cfg.expand * d_model
+    nheads = d_in // cfg.head_dim
+    gn = cfg.ngroups * cfg.state_dim
+    return dict(d_in=d_in, nheads=nheads, gn=gn)
+
+
+def ssm_param_shapes(d_model: int, cfg: SSMConfig) -> dict:
+    dims = ssm_dims(d_model, cfg)
+    d_in, nheads, gn = dims["d_in"], dims["nheads"], dims["gn"]
+    cw = cfg.conv_width
+    return {
+        "z_proj": (d_model, d_in),
+        "x_proj": (d_model, d_in),
+        "B_proj": (d_model, gn),
+        "C_proj": (d_model, gn),
+        "dt_proj": (d_model, nheads),
+        "conv_x_w": (cw, d_in), "conv_x_b": (d_in,),
+        "conv_B_w": (cw, gn), "conv_B_b": (gn,),
+        "conv_C_w": (cw, gn), "conv_C_b": (gn,),
+        "A_log": (nheads,),
+        "D": (nheads,),
+        "dt_bias": (nheads,),
+        "gate_norm": (d_in,),
+        "out_proj": (d_in, d_model),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted adds.  x: [B,S,C]; w: [cw,C]."""
+    cw = w.shape[0]
+    out = jnp.zeros(x.shape, dtype=jnp.float32)
+    for i in range(cw):
+        shift = cw - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xi.astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _conv_step(tail: jax.Array, x_new: jax.Array, w: jax.Array,
+               b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One-token depthwise conv.  tail: [B,cw-1,C]; x_new: [B,1,C]."""
+    window = jnp.concatenate([tail, x_new], axis=1)          # [B,cw,C]
+    out = jnp.sum(window.astype(jnp.float32)
+                  * w.astype(jnp.float32)[None], axis=1, keepdims=True)
+    out = jax.nn.silu(out + b.astype(jnp.float32)).astype(x_new.dtype)
+    return out, window[:, 1:]
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array,
+                eps: float = 1e-5) -> jax.Array:
+    dtype = y.dtype
+    y = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    return (y * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(dtype)
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, chunk: int,
+                 h0=None) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: [B,S,h,p]; dt: [B,S,h] (post-softplus); A: [h] (negative);
+    Bm, Cm: [B,S,g,n].  Returns (y [B,S,h,p], final_state [B,h,n,p]).
+    """
+    B_, S, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    hpg = h // g
+    if S % chunk:
+        chunk = S                                            # tiny shapes
+    nc = S // chunk
+
+    dA = dt * A[None, None, :]                               # [B,S,h] <= 0
+
+    def resh(t):
+        return t.reshape(B_, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xs, dts = resh(x), resh(dt)
+    dAs, Bs, Cs = resh(dA), resh(Bm), resh(Cm)
+    if h0 is None:
+        h0 = jnp.zeros((B_, h, n, p), dtype=jnp.float32)
+
+    def body(h_state, inp):
+        xc, dtc, dAc, Bc, Cc = inp                           # [B,l,...]
+        lq = xc.shape[1]
+        cum = jnp.cumsum(dAc.astype(jnp.float32), axis=1)    # [B,l,h]
+        # intra-chunk (quadratic dual form)
+        CB = jnp.einsum("bign,bjgn->bgij", Cc.astype(jnp.float32),
+                        Bc.astype(jnp.float32))              # [B,g,l,l]
+        CB = jnp.repeat(CB, hpg, axis=1)                     # [B,h,l,l]
+        li = cum.swapaxes(1, 2)                              # [B,h,l]
+        L = jnp.exp(jnp.clip(li[:, :, :, None] - li[:, :, None, :],
+                             -60.0, 0.0))
+        mask = jnp.tril(jnp.ones((lq, lq), bool))
+        W = jnp.where(mask[None, None], CB * L, 0.0)
+        W = W * dtc.astype(jnp.float32).swapaxes(1, 2)[:, :, None, :]
+        y_diag = jnp.einsum("bhij,bjhp->bihp", W, xc.astype(jnp.float32))
+        # inter-chunk contribution from the incoming state
+        decay_in = jnp.exp(jnp.clip(cum, -60.0, 0.0))        # [B,l,h]
+        Ch = jnp.repeat(Cc.astype(jnp.float32), hpg, axis=2)  # [B,l,h,n]
+        y_off = jnp.einsum("blhn,bhnp->blhp", Ch, h_state) \
+            * decay_in[..., None]
+        # state update
+        decay_last = jnp.exp(jnp.clip(cum[:, -1], -60.0, 0.0))   # [B,h]
+        decay_state = jnp.exp(jnp.clip(cum[:, -1:, :] - cum, -60.0, 0.0))
+        Bh = jnp.repeat(Bc.astype(jnp.float32), hpg, axis=2)     # [B,l,h,n]
+        contrib = jnp.einsum("blhn,blh,blhp->bhnp", Bh,
+                             decay_state * dtc.astype(jnp.float32),
+                             xc.astype(jnp.float32))
+        h_new = decay_last[:, :, None, None] * h_state + contrib
+        return h_new, (y_diag + y_off).astype(x.dtype)
+
+    h_final, ys = jax.lax.scan(body, h0, (xs, dts, dAs, Bs, Cs))
+    y = ys.swapaxes(0, 1).reshape(B_, S, h, p)
+    return y, h_final
+
+
+def _project(x: jax.Array, p: dict):
+    dtype = x.dtype
+    z = x @ p["z_proj"].astype(dtype)
+    xr = x @ p["x_proj"].astype(dtype)
+    Br = x @ p["B_proj"].astype(dtype)
+    Cr = x @ p["C_proj"].astype(dtype)
+    dt = x @ p["dt_proj"].astype(dtype)
+    return z, xr, Br, Cr, dt
+
+
+def ssm_forward(x: jax.Array, p: dict, d_model: int, cfg: SSMConfig,
+                return_state: bool = False):
+    """Full-sequence Mamba-2 mixer.  x: [B,S,d]."""
+    dims = ssm_dims(d_model, cfg)
+    d_in, nheads = dims["d_in"], dims["nheads"]
+    z, xr, Br, Cr, dt = _project(x, p)
+    x_c = _causal_conv(xr, p["conv_x_w"], p["conv_x_b"])
+    B_c = _causal_conv(Br, p["conv_B_w"], p["conv_B_b"])
+    C_c = _causal_conv(Cr, p["conv_C_w"], p["conv_C_b"])
+    B_, S, _ = x.shape
+    x_h = x_c.reshape(B_, S, nheads, cfg.head_dim)
+    Bm = B_c.reshape(B_, S, cfg.ngroups, cfg.state_dim)
+    Cm = C_c.reshape(B_, S, cfg.ngroups, cfg.state_dim)
+    dt_f = jax.nn.softplus(dt.astype(jnp.float32)
+                           + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h_final = _ssd_chunked(x_h, dt_f, A, Bm, Cm, cfg.chunk_size)
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * x_h
+    y = y.reshape(B_, S, d_in)
+    y = _gated_norm(y, z, p["gate_norm"])
+    out = y @ p["out_proj"].astype(x.dtype)
+    if return_state:
+        cw = cfg.conv_width
+        state = {
+            "ssm": h_final,
+            "conv_x": xr[:, S - (cw - 1):],
+            "conv_B": Br[:, S - (cw - 1):],
+            "conv_C": Cr[:, S - (cw - 1):],
+        }
+        return out, state
+    return out
+
+
+def ssm_decode_step(x: jax.Array, state: dict, p: dict, d_model: int,
+                    cfg: SSMConfig):
+    """One-token decode.  x: [B,1,d] -> (y [B,1,d], new_state)."""
+    dims = ssm_dims(d_model, cfg)
+    d_in, nheads = dims["d_in"], dims["nheads"]
+    z, xr, Br, Cr, dt = _project(x, p)
+    x_c, conv_x = _conv_step(state["conv_x"], xr, p["conv_x_w"],
+                             p["conv_x_b"])
+    B_c, conv_B = _conv_step(state["conv_B"], Br, p["conv_B_w"],
+                             p["conv_B_b"])
+    C_c, conv_C = _conv_step(state["conv_C"], Cr, p["conv_C_w"],
+                             p["conv_C_b"])
+    B_ = x.shape[0]
+    x_h = x_c.reshape(B_, nheads, cfg.head_dim)
+    Bm = B_c.reshape(B_, cfg.ngroups, cfg.state_dim)
+    Cm = C_c.reshape(B_, cfg.ngroups, cfg.state_dim)
+    dt_f = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                           + p["dt_bias"].astype(jnp.float32))   # [B,h]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(jnp.clip(dt_f * A[None], -60.0, 0.0))           # [B,h]
+    hpg = nheads // cfg.ngroups
+    Bh = jnp.repeat(Bm.astype(jnp.float32), hpg, axis=1)         # [B,h,n]
+    Ch = jnp.repeat(Cm.astype(jnp.float32), hpg, axis=1)
+    h_new = dA[:, :, None, None] * state["ssm"] \
+        + jnp.einsum("bhn,bh,bhp->bhnp", Bh, dt_f,
+                     x_h.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, h_new)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] \
+        * x_h.astype(jnp.float32)
+    y = y.reshape(B_, 1, d_in).astype(x.dtype)
+    y = _gated_norm(y, z, p["gate_norm"])
+    out = y @ p["out_proj"].astype(x.dtype)
+    new_state = {"ssm": h_new, "conv_x": conv_x, "conv_B": conv_B,
+                 "conv_C": conv_C}
+    return out, new_state
+
+
+def ssm_state_shapes(batch: int, d_model: int, cfg: SSMConfig,
+                     dtype=jnp.bfloat16) -> dict:
+    dims = ssm_dims(d_model, cfg)
+    cw = cfg.conv_width
+    return {
+        "ssm": ((batch, dims["nheads"], cfg.state_dim, cfg.head_dim),
+                jnp.float32),
+        "conv_x": ((batch, cw - 1, dims["d_in"]), dtype),
+        "conv_B": ((batch, cw - 1, dims["gn"]), dtype),
+        "conv_C": ((batch, cw - 1, dims["gn"]), dtype),
+    }

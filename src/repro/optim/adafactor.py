@@ -1,0 +1,86 @@
+"""Adafactor: factored second moments — the memory-lean optimizer used for
+the 398B (jamba) and 1T (kimi-k2) archs, where AdamW fp32 state (12.5 TB
+for 1.04T params) exceeds a 512-chip v5e slice's 8 TB HBM.
+
+For a [.., r, c] tensor the second moment is factored into row/col means
+(O(r+c) state); 0/1-D tensors keep the full accumulator.  First moment is
+omitted (beta1=0, the standard memory-lean setting).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class Adafactor:
+    def __init__(self, lr_fn, decay=0.8, eps=1e-30, clip_threshold=1.0,
+                 weight_decay=0.0):
+        self.lr_fn = lr_fn
+        self.decay = decay
+        self.eps = eps
+        self.clip = clip_threshold
+        self.weight_decay = weight_decay
+
+    @staticmethod
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(self, params):
+        def vr(p):
+            if self._factored(p):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vc(p):
+            if self._factored(p):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((1,), jnp.float32)
+
+        return {"v_row": jax.tree.map(vr, params),
+                "v_col": jax.tree.map(vc, params)}
+
+    def state_spec_like(self, param_specs):
+        def row(spec):
+            parts = list(spec)
+            return P(*parts[:-1]) if len(parts) >= 2 else spec
+
+        def col(spec):
+            parts = list(spec)
+            if len(parts) >= 2:
+                return P(*(parts[:-2] + parts[-1:]))
+            return P(None)
+
+        return {"v_row": jax.tree.map(row, param_specs),
+                "v_col": jax.tree.map(col, param_specs)}
+
+    def update(self, grads, state, params, step):
+        t = (step + 1).astype(jnp.float32)
+        beta2 = 1.0 - jnp.power(t, -self.decay)
+        lr = self.lr_fn(step)
+
+        def upd(g, vr, vc, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + self.eps
+            if self._factored(p):
+                vr = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+                row_mean = jnp.mean(vr, axis=-1, keepdims=True)
+                u = g * jax.lax.rsqrt(vr / jnp.maximum(row_mean, self.eps)
+                                      )[..., None] \
+                    * jax.lax.rsqrt(vc)[..., None, :]
+            else:
+                vr = beta2 * vr + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(vr)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / self.clip)
+            if p.ndim >= 2 and self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+            return new_p, vr, vc
+
+        out = jax.tree.map(upd, grads, state["v_row"], state["v_col"],
+                           params)
+        pick = lambda i: jax.tree.map(
+            lambda o: o[i], out, is_leaf=lambda o: isinstance(o, tuple))
+        return pick(0), {"v_row": pick(1), "v_col": pick(2)}

@@ -1,0 +1,49 @@
+"""AdamW with decoupled weight decay.  State kept in fp32."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamW:
+    def __init__(self, lr_fn, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1):
+        self.lr_fn = lr_fn
+        self.b1, self.b2, self.eps = b1, b2, eps
+        self.weight_decay = weight_decay
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+        }
+
+    def state_spec_like(self, param_specs):
+        """Optimizer-state PartitionSpecs mirror the parameter specs."""
+        return {"mu": param_specs, "nu": param_specs}
+
+    def update(self, grads, state, params, step):
+        b1, b2 = self.b1, self.b2
+        t = (step + 1).astype(jnp.float32)
+        lr = self.lr_fn(step)
+
+        def upd(g, mu, nu, p):
+            g = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * jnp.square(g)
+            mu_hat = mu / (1 - b1 ** t)
+            nu_hat = nu / (1 - b2 ** t)
+            delta = mu_hat / (jnp.sqrt(nu_hat) + self.eps)
+            if p.ndim >= 2:                      # no decay on norms/biases
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return new_p, mu, nu
+
+        out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda o: isinstance(o, tuple))
+        new_mu = jax.tree.map(lambda o: o[1], out,
+                              is_leaf=lambda o: isinstance(o, tuple))
+        new_nu = jax.tree.map(lambda o: o[2], out,
+                              is_leaf=lambda o: isinstance(o, tuple))
+        return new_params, {"mu": new_mu, "nu": new_nu}

@@ -1,0 +1,42 @@
+"""LR schedules: cosine and WSD (Warmup-Stable-Decay, MiniCPM)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(kind: str, base_lr: float, total_steps: int,
+                  warmup_steps: int = 0, decay_frac: float = 0.1,
+                  final_lr_frac: float = 0.1):
+    warmup_steps = warmup_steps or max(1, total_steps // 100)
+
+    if kind == "cosine":
+        def fn(step):
+            step = jnp.asarray(step, jnp.float32)
+            warm = step / warmup_steps
+            prog = jnp.clip((step - warmup_steps)
+                            / jnp.maximum(1, total_steps - warmup_steps),
+                            0.0, 1.0)
+            cos = final_lr_frac + (1 - final_lr_frac) \
+                * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+            return base_lr * jnp.where(step < warmup_steps, warm, cos)
+        return fn
+
+    if kind == "wsd":
+        # MiniCPM: linear warmup, long stable plateau, short exponential-ish
+        # decay over the final ``decay_frac`` of training.
+        decay_start = int(total_steps * (1.0 - decay_frac))
+
+        def fn(step):
+            step = jnp.asarray(step, jnp.float32)
+            warm = step / warmup_steps
+            stable = jnp.ones(())
+            prog = jnp.clip((step - decay_start)
+                            / jnp.maximum(1, total_steps - decay_start),
+                            0.0, 1.0)
+            decay = jnp.power(10.0, -prog) * (1 - prog) + final_lr_frac * prog
+            val = jnp.where(step < warmup_steps, warm,
+                            jnp.where(step < decay_start, stable, decay))
+            return base_lr * val
+        return fn
+
+    raise ValueError(f"unknown schedule {kind!r}")

@@ -1,0 +1,2 @@
+from repro.roofline.hlo_analysis import analyze_hlo, collective_bytes_from_hlo  # noqa: F401
+from repro.roofline.analysis import roofline_terms, HW  # noqa: F401

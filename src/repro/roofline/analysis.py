@@ -1,0 +1,123 @@
+"""Roofline term derivation from dry-run artifacts.
+
+Hardware model: TPU v5e —
+  peak bf16 compute  197 TFLOP/s per chip
+  HBM bandwidth      819 GB/s per chip
+  ICI link bandwidth ~50 GB/s per link
+
+Terms (seconds per step):
+  compute    = HLO_FLOPs / (chips * peak)         [FLOPs from cost_analysis;
+               cost_analysis counts while bodies ONCE, so scanned-layer
+               FLOPs are rescaled by the measured scan calibration factor]
+  memory     = HLO_bytes / (chips * HBM_bw)
+  collective = per-device wire bytes / link_bw    [parsed from HLO, loop
+               bodies scaled by trip count]
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per processed token
+count — the 'useful' fraction MODEL_FLOPS / HLO_FLOPs flags remat /
+dispatch / padding waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, Optional
+
+from repro.configs import get_config, get_shape
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12          # bf16 per chip
+    hbm_bw: float = 819e9               # bytes/s per chip
+    link_bw: float = 50e9               # bytes/s per link
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6*N*D convention (N = active params, D = tokens processed)."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens          # forward only
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def roofline_terms(rec: dict, hw: HW = HW()) -> dict:
+    """rec: one dry-run JSON record -> roofline terms in seconds.
+
+    ``flops_scaled`` / ``bytes_scaled`` / wire bytes come from the HLO
+    analyzer and are PER-DEVICE (post-SPMD shapes), with while-loop bodies
+    scaled by trip count; terms therefore divide by per-chip rates only.
+    """
+    chips = rec["n_devices"]
+    flops = rec["cost"].get("flops", 0.0)
+    flops_scaled = rec.get("flops_scaled") or flops
+    hbm_bytes = rec["cost"].get("bytes accessed", 0.0)
+    hbm_scaled = rec.get("bytes_scaled") or hbm_bytes
+    wire = rec["collectives"]["total_wire_bytes"]
+
+    compute_s = flops_scaled / hw.peak_flops
+    memory_s = hbm_scaled / hw.hbm_bw
+    collective_s = wire / hw.link_bw
+
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = dominant.replace("_s", "")
+    step_s = max(terms.values())
+
+    mflops = model_flops(rec["arch"], rec["shape"]) / chips  # per device
+    useful = mflops / flops_scaled if flops_scaled else 0.0
+    # roofline fraction: useful model FLOPs over what a chip could do in
+    # the bottleneck-imposed step time.
+    frac = mflops / (hw.peak_flops * step_s) if step_s else 0.0
+    return dict(terms, dominant=bound, step_s=step_s,
+                model_flops_per_chip=mflops, hlo_flops=flops_scaled,
+                useful_flops_ratio=useful, roofline_fraction=frac)
+
+
+def load_records(results_dir: str, tag: str = "") -> Dict[str, dict]:
+    out = {}
+    if not os.path.isdir(results_dir):
+        return out
+    for fn in sorted(os.listdir(results_dir)):
+        if not fn.endswith(".json"):
+            continue
+        stem = fn[:-5]
+        parts = stem.split("__")
+        has_tag = len(parts) == 4
+        if tag and (not has_tag or parts[3] != tag):
+            continue
+        if not tag and has_tag:
+            continue
+        with open(os.path.join(results_dir, fn)) as f:
+            out[stem] = json.load(f)
+    return out
+
+
+def format_table(records: Dict[str, dict], hw: HW = HW(),
+                 mesh: Optional[str] = "single") -> str:
+    rows = []
+    header = (f"{'arch':24s} {'shape':12s} {'mesh':6s} "
+              f"{'compute_s':>10s} {'memory_s':>10s} {'collect_s':>10s} "
+              f"{'bound':>10s} {'useful':>7s} {'roofl%':>7s}")
+    rows.append(header)
+    rows.append("-" * len(header))
+    for key, rec in sorted(records.items()):
+        if mesh and rec["mesh"] != mesh:
+            continue
+        t = roofline_terms(rec, hw)
+        rows.append(
+            f"{rec['arch']:24s} {rec['shape']:12s} {rec['mesh']:6s} "
+            f"{t['compute_s']:10.4f} {t['memory_s']:10.4f} "
+            f"{t['collective_s']:10.4f} {t['dominant']:>10s} "
+            f"{t['useful_flops_ratio']:7.3f} "
+            f"{100*t['roofline_fraction']:6.1f}%")
+    return "\n".join(rows)

@@ -1,0 +1,361 @@
+"""Mini HLO cost analyzer with while-loop scaling.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified
+empirically: a 10-step scanned matmul reports the FLOPs of a single
+matmul).  Since the model stack scans over layers, roofline terms must
+rescale loop bodies by their trip counts.  This module parses
+``compiled.as_text()`` (post-SPMD, per-device shapes) into computations,
+propagates execution multipliers through ``while`` ops (using the
+``known_trip_count`` backend_config XLA attaches, falling back to the
+condition-computation constant) and ``fusion calls=``, and accumulates:
+
+  * dot FLOPs      2 * prod(result dims) * prod(lhs contracting dims)
+  * HBM bytes      sum over top-level ops of operand + result bytes
+                   (the same convention as HloCostAnalysis bytes-accessed)
+  * collective wire bytes by type (ring-algorithm conventions)
+
+Everything is returned per-device (post-partitioning shapes).
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%(?P<name>[\w.\-]+)\s*=\s*(?P<rest>.+)$")
+_OPNAME_RE = re.compile(
+    r"^(?P<result>(?:\([^)]*\)|[\w\[\]{},\s]*?))\s*"
+    r"(?P<op>[\w\-]+)\((?P<operands>.*?)\)(?P<attrs>.*)$")
+_COMP_START_RE = re.compile(
+    r"^(ENTRY\s+)?%?(?P<name>[\w.\-]+)\s+\(.*\)\s*->.*\{")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_COND_BODY_RE = re.compile(
+    r"condition=%?(?P<cond>[\w.\-]+)|body=%?(?P<body>[\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?(?P<name>[\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "add-dependency",
+    "iota",
+}
+_COLLECTIVE_OPS = {"all-reduce", "all-gather", "reduce-scatter",
+                   "all-to-all", "collective-permute"}
+
+
+def _shape_dims(text: str) -> List[Tuple[int, List[int]]]:
+    """All (dtype_bytes, dims) found in a shape string (handles tuples)."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        dl = [int(d) for d in dims.split(",")] if dims else []
+        out.append((_DTYPE_BYTES[dt], dl))
+    return out
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for b, dims in _shape_dims(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += b * n
+    return total
+
+
+class Instr:
+    __slots__ = ("name", "result", "op", "operands", "attrs", "line")
+
+    def __init__(self, name, result, op, operands, attrs, line):
+        self.name = name
+        self.result = result
+        self.op = op
+        self.operands = operands
+        self.attrs = attrs
+        self.line = line
+
+
+def _parse(hlo: str):
+    comps: Dict[str, List[Instr]] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        m = _COMP_START_RE.match(line)
+        if m:
+            cur = m.group("name")
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        rest = mi.group("rest")
+        mo = _OPNAME_RE.match(rest)
+        if not mo:
+            continue
+        comps[cur].append(Instr(mi.group("name"), mo.group("result").strip(),
+                                mo.group("op"), mo.group("operands"),
+                                mo.group("attrs"), line))
+    return comps, entry
+
+
+def _build_shape_maps(comps):
+    """name -> result shape text, per computation (fallback to global)."""
+    local = {c: {i.name: i.result for i in instrs}
+             for c, instrs in comps.items()}
+    glob: Dict[str, str] = {}
+    for c in comps.values():
+        for i in c:
+            glob.setdefault(i.name, i.result)
+    return local, glob
+
+
+def _multipliers(comps, entry) -> Dict[str, float]:
+    mult: Dict[str, float] = defaultdict(float)
+    if entry is None:
+        return {name: 1.0 for name in comps}
+    mult[entry] = 1.0
+    order = [entry]
+    seen = set()
+    while order:
+        name = order.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        for i in comps.get(name, []):
+            if i.op == "while":
+                cb = dict(condition=None, body=None)
+                for m in _COND_BODY_RE.finditer(i.line):
+                    if m.group("cond"):
+                        cb["condition"] = m.group("cond")
+                    if m.group("body"):
+                        cb["body"] = m.group("body")
+                trips = 1
+                mt = _TRIP_RE.search(i.line)
+                if mt:
+                    trips = int(mt.group(1))
+                elif cb["condition"] in comps:
+                    consts = [int(c) for inst in comps[cb["condition"]]
+                              for c in _CONST_RE.findall(inst.line)]
+                    consts = [c for c in consts if 1 < c <= 10_000_000]
+                    trips = max(consts) if consts else 1
+                if cb["body"]:
+                    mult[cb["body"]] += mult[name] * trips
+                    order.append(cb["body"])
+                if cb["condition"]:
+                    mult[cb["condition"]] += mult[name] * trips
+            elif i.op == "fusion":
+                mc = _CALLS_RE.search(i.line)
+                if mc:
+                    mult[mc.group("name")] += mult[name]
+                    order.append(mc.group("name"))
+    return dict(mult)
+
+
+def _dot_flops(i: Instr, shape_map, glob) -> float:
+    res_dims = _shape_dims(i.result)
+    n_res = 1
+    for _, dims in res_dims:
+        for d in dims:
+            n_res *= d
+    mlc = _LHS_C_RE.search(i.attrs)
+    contract = [int(x) for x in mlc.group(1).split(",")] if mlc and \
+        mlc.group(1) else []
+    names = _OPERAND_NAME_RE.findall(i.operands)
+    k = 1
+    if names:
+        lhs_shape = shape_map.get(names[0]) or glob.get(names[0], "")
+        dims_list = _shape_dims(lhs_shape)
+        if dims_list:
+            _, ldims = dims_list[0]
+            for c in contract:
+                if c < len(ldims):
+                    k *= ldims[c]
+    return 2.0 * n_res * k
+
+
+def _collective_wire(i: Instr) -> Tuple[str, float]:
+    res_b = _shape_bytes(i.result)
+    # XLA:CPU's BFloat16Normalization promotes bf16 collectives to f32
+    # (no native bf16 reductions on the CPU backend); the TPU pipeline
+    # keeps them bf16.  Detect the rewritten '..._promoted' reducer and
+    # count wire bytes at the true (bf16) width.
+    if "promoted" in i.line and "f32[" in i.result:
+        res_b //= 2
+    gm = _GROUPS_IOTA_RE.search(i.line)
+    if gm:
+        n = int(gm.group(2))
+    else:
+        gl = _GROUPS_LIST_RE.search(i.line)
+        n = len(gl.group(1).split(",")) if gl else 2
+    n = max(n, 2)
+    frac = (n - 1) / n
+    op = i.op
+    if op == "all-gather":
+        return op, frac * res_b
+    if op == "all-reduce":
+        return op, 2.0 * frac * res_b
+    if op == "reduce-scatter":
+        return op, frac * n * res_b
+    if op == "all-to-all":
+        return op, frac * res_b
+    return op, float(res_b)          # collective-permute
+
+
+# ops that are genuine HBM data movement even under perfect fusion
+_HEAVY_OPS = {"dot", "gather", "scatter", "dynamic-slice",
+              "dynamic-update-slice", "copy", "convolution", "sort",
+              "custom-call"}
+
+# elementwise arithmetic (VPU work) — counted per result element, inside
+# fusion bodies too; the metric for integer-bound (hashing) kernels where
+# XLA's 'flops' undercounts
+_VPU_OPS = {"add", "subtract", "multiply", "divide", "and", "or", "xor",
+            "not", "shift-left", "shift-right-logical",
+            "shift-right-arithmetic", "select", "compare", "maximum",
+            "minimum", "tanh", "exponential", "negate", "convert"}
+
+
+def _result_elems(result: str) -> int:
+    n = 0
+    for _, dims in _shape_dims(result):
+        e = 1
+        for d in dims:
+            e *= d
+        n += e
+    return n
+
+
+def _heavy_bytes(i: "Instr", smap, glob) -> float:
+    """HBM traffic estimate for one heavy op.
+
+    Slicing ops read only the slice from HBM, not their (possibly huge,
+    e.g. scan-stacked-weights) operand, so they are charged by result /
+    update size; dots and copies are charged operands + result.
+    """
+    res_b = _shape_bytes(i.result)
+    if i.op in ("dynamic-slice", "gather"):
+        return 2.0 * res_b                       # read slice + write out
+    if i.op in ("dynamic-update-slice", "scatter"):
+        opnds = []
+        for nm in _OPERAND_NAME_RE.findall(i.operands):
+            s = smap.get(nm) or glob.get(nm)
+            if s:
+                opnds.append(_shape_bytes(s))
+        upd = min(opnds) if opnds else res_b
+        return 2.0 * upd                         # read + write the region
+    opd_b = 0
+    for nm in _OPERAND_NAME_RE.findall(i.operands):
+        s = smap.get(nm) or glob.get(nm)
+        if s:
+            opd_b += _shape_bytes(s)
+    return float(res_b + opd_b)
+
+
+def analyze_hlo(hlo: str, top_k: int = 12) -> dict:
+    comps, entry = _parse(hlo)
+    local_maps, glob = _build_shape_maps(comps)
+    mult = _multipliers(comps, entry)
+
+    flops = 0.0
+    int_ops = 0.0           # elementwise/VPU op count (see _VPU_OPS)
+    bytes_upper = 0.0       # no-fusion upper bound (every top-level op r+w)
+    bytes_min = 0.0         # perfect-fusion floor (heavy-op traffic only)
+    wire: Dict[str, float] = defaultdict(float)
+    op_counts: Dict[str, float] = defaultdict(float)
+    top_coll: List[tuple] = []
+    top_bytes: List[tuple] = []
+
+    fusion_names = set()
+    for c, instrs in comps.items():
+        for i in instrs:
+            if i.op == "fusion":
+                mc = _CALLS_RE.search(i.line)
+                if mc:
+                    fusion_names.add(mc.group("name"))
+
+    for cname, instrs in comps.items():
+        m = mult.get(cname, 1.0)
+        if m <= 0:
+            continue
+        smap = local_maps[cname]
+        in_fusion = cname in fusion_names
+        for i in instrs:
+            base_op = i.op.replace("-start", "").replace("-done", "")
+            if base_op == "dot":
+                flops += m * _dot_flops(i, smap, glob)
+            if base_op in _VPU_OPS:
+                int_ops += m * _result_elems(i.result)
+            if base_op in _COLLECTIVE_OPS and not in_fusion:
+                op, w = _collective_wire(i)
+                wire[op] += m * w
+                op_counts[op] += m
+                top_coll.append((m * w, op, i.result[:48], int(m), cname))
+            # heavy-op traffic is counted WHERE THE OP LIVES — inside
+            # fusion bodies the dynamic-slice result is layer-sized, while
+            # the fusion call-site operand would be the full scan-stacked
+            # array (32x overcount).  Elementwise-only fusions contribute
+            # nothing (perfect-fusion floor).
+            if base_op in _HEAVY_OPS and base_op not in _SKIP_BYTES_OPS:
+                hb = m * _heavy_bytes(i, smap, glob)
+                bytes_min += hb
+                top_bytes.append((hb, base_op, i.result[:48], int(m),
+                                  cname))
+            if in_fusion:
+                continue
+            if base_op in _SKIP_BYTES_OPS or base_op in _COLLECTIVE_OPS:
+                continue
+            res_b = _shape_bytes(i.result)
+            opd_b = 0
+            for nm in _OPERAND_NAME_RE.findall(i.operands):
+                s = smap.get(nm) or glob.get(nm)
+                if s:
+                    opd_b += _shape_bytes(s)
+            bytes_upper += m * (res_b + opd_b)
+
+    top_coll.sort(key=lambda t: -t[0])
+    top_bytes.sort(key=lambda t: -t[0])
+    return {
+        "flops": flops,
+        "int_ops": int_ops,
+        "bytes_accessed": bytes_min,
+        "bytes_upper": bytes_upper,
+        "wire_bytes": dict(wire),
+        "op_counts": {k: int(v) for k, v in op_counts.items()},
+        "total_wire_bytes": float(sum(wire.values())),
+        "n_computations": len(comps),
+        "top_collectives": [
+            dict(wire_bytes=w, op=o, result=r, mult=mm, comp=c)
+            for w, o, r, mm, c in top_coll[:top_k]],
+        "top_bytes": [
+            dict(bytes=w, op=o, result=r, mult=mm, comp=c)
+            for w, o, r, mm, c in top_bytes[:top_k]],
+    }
+
+
+def collective_bytes_from_hlo(hlo: str) -> dict:
+    a = analyze_hlo(hlo)
+    return {"wire_bytes": a["wire_bytes"],
+            "op_counts": a["op_counts"],
+            "total_wire_bytes": a["total_wire_bytes"]}

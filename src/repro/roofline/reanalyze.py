@@ -1,0 +1,50 @@
+"""Re-derive roofline fields of dry-run JSONs from stored HLO (no
+recompilation).
+
+  PYTHONPATH=src python -m repro.roofline.reanalyze [results_dir]
+"""
+from __future__ import annotations
+
+import gzip
+import json
+import os
+import sys
+
+from repro.roofline.hlo_analysis import analyze_hlo
+
+
+def main():
+    base = sys.argv[1] if len(sys.argv) > 1 else "results"
+    dr = os.path.join(base, "dryrun")
+    hlo_dir = os.path.join(base, "hlo")
+    n = 0
+    for fn in sorted(os.listdir(dr)):
+        if not fn.endswith(".json"):
+            continue
+        stem = fn[:-5]
+        hlo_path = os.path.join(hlo_dir, stem + ".hlo.gz")
+        if not os.path.exists(hlo_path):
+            print(f"[skip] no HLO for {stem}")
+            continue
+        with gzip.open(hlo_path, "rt") as f:
+            hlo = f.read()
+        an = analyze_hlo(hlo)
+        path = os.path.join(dr, fn)
+        with open(path) as f:
+            rec = json.load(f)
+        rec["flops_scaled"] = an["flops"]
+        rec["bytes_scaled"] = an["bytes_accessed"]
+        rec["bytes_upper"] = an["bytes_upper"]
+        rec["collectives"] = {"wire_bytes": an["wire_bytes"],
+                              "op_counts": an["op_counts"],
+                              "total_wire_bytes": an["total_wire_bytes"]}
+        rec["top_collectives"] = an["top_collectives"]
+        rec["top_bytes"] = an["top_bytes"]
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+    print(f"reanalyzed {n} records")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Serving steps: batched prefill and single-token decode.
+
+``decode_32k`` / ``long_500k`` lower the decode step (one new token
+against a KV cache / SSM state of ``seq_len``); ``prefill_32k`` lowers the
+prefill step.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def make_prefill_step(model):
+    def prefill_step(params, tokens, embeds=None):
+        cache, logits = model.prefill(params, tokens, embeds)
+        next_tok = jnp.argmax(logits, axis=-1)
+        return cache, logits, next_tok
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, cache, tokens, pos):
+        cache, logits = model.decode_step(params, cache, tokens, pos)
+        next_tok = jnp.argmax(logits, axis=-1)
+        return cache, logits, next_tok
+    return decode_step
+
+
+def greedy_generate(model, params, prompt_tokens, max_new: int,
+                    capacity: Optional[int] = None):
+    """Simple batched greedy decoding driver (used by examples/tests)."""
+    B, S = prompt_tokens.shape
+    capacity = capacity or model.capacity_for(S + max_new)
+    cache, logits = model.prefill(params, prompt_tokens, capacity=capacity)
+    tok = jnp.argmax(logits, axis=-1)[:, None]
+    out = [tok]
+    decode = jax.jit(model.decode_step)
+    for i in range(max_new - 1):
+        pos = jnp.asarray(S + i, jnp.int32)
+        cache, logits = decode(params, cache, tok, pos)
+        tok = jnp.argmax(logits, axis=-1)[:, None]
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

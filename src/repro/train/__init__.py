@@ -1,0 +1,1 @@
+from repro.train.trainstep import make_train_step, blocked_cross_entropy  # noqa: F401

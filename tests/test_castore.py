@@ -1,0 +1,114 @@
+"""CA store + SAI system invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SAI, SAIConfig, NodeFailure, make_store
+
+
+def _sai(ca="fixed", hasher="cpu", replication=1, **kw):
+    mgr, nodes = make_store(4, replication=replication)
+    cfg = SAIConfig(ca=ca, hasher=hasher, block_size=4096, avg_chunk=4096,
+                    min_chunk=1024, max_chunk=16384, **kw)
+    return SAI(mgr, cfg), mgr, nodes
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.binary(min_size=1, max_size=50_000))
+def test_write_read_identity(data):
+    sai, _, _ = _sai()
+    sai.write("/f", data)
+    assert sai.read("/f") == data
+
+
+def test_dedup_idempotence(rng):
+    """Writing the same file twice stores zero new bytes (paper's
+    'similar' workload upper bound)."""
+    sai, mgr, _ = _sai()
+    data = rng.integers(0, 256, 100_000, dtype=np.uint8).tobytes()
+    st1 = sai.write("/f", data)
+    before = mgr.stats()["stored_bytes"]
+    st2 = sai.write("/f", data)
+    after = mgr.stats()["stored_bytes"]
+    assert st2.new_bytes == 0 and st2.similarity == 1.0
+    assert before == after
+
+
+def test_cross_file_dedup(rng):
+    sai, mgr, _ = _sai()
+    data = rng.integers(0, 256, 50_000, dtype=np.uint8).tobytes()
+    sai.write("/a", data)
+    st = sai.write("/b", data)
+    assert st.new_bytes == 0
+
+
+def test_versioning(rng):
+    sai, _, _ = _sai()
+    v0 = rng.integers(0, 256, 20_000, dtype=np.uint8).tobytes()
+    v1 = v0[:10_000] + b"new data" + v0[10_000:]
+    sai.write("/f", v0)
+    sai.write("/f", v1)
+    assert sai.read("/f", version=0) == v0
+    assert sai.read("/f", version=1) == v1
+
+
+def test_replication_survives_node_failure(rng):
+    sai, mgr, nodes = _sai(replication=2)
+    data = rng.integers(0, 256, 60_000, dtype=np.uint8).tobytes()
+    sai.write("/f", data)
+    mgr.handle_node_failure(1)
+    assert sai.read("/f") == data
+    # a second failure after re-replication still survives
+    mgr.handle_node_failure(2)
+    assert sai.read("/f") == data
+
+
+def test_unreplicated_failure_detected(rng):
+    sai, mgr, nodes = _sai(replication=1)
+    data = rng.integers(0, 256, 60_000, dtype=np.uint8).tobytes()
+    sai.write("/f", data)
+    for n in nodes:
+        n.fail()
+    with pytest.raises(NodeFailure):
+        sai.read("/f")
+
+
+def test_corruption_detected(rng):
+    sai, mgr, _ = _sai()
+    data = rng.integers(0, 256, 30_000, dtype=np.uint8).tobytes()
+    sai.write("/f", data)
+    digest = next(iter(mgr.block_registry))
+    for nid in mgr.block_registry[digest]:
+        blk = mgr.nodes[nid].blocks[digest]
+        mgr.nodes[nid].blocks[digest] = bytes([blk[0] ^ 1]) + blk[1:]
+    with pytest.raises(IOError):
+        sai.read("/f")
+
+
+def test_non_ca_mode(rng):
+    sai, mgr, _ = _sai(ca="none")
+    data = rng.integers(0, 256, 30_000, dtype=np.uint8).tobytes()
+    st1 = sai.write("/f", data)
+    st2 = sai.write("/f", data)          # no dedup in non-CA mode
+    assert st1.new_bytes == st2.new_bytes == len(data)
+    assert sai.read("/f") == data
+
+
+def test_gc_unreferenced(rng):
+    sai, mgr, _ = _sai()
+    d1 = rng.integers(0, 256, 20_000, dtype=np.uint8).tobytes()
+    sai.write("/f", d1)
+    mgr.files.clear()                     # drop all block-maps
+    removed = mgr.gc_unreferenced()
+    assert removed > 0
+    assert mgr.stats()["stored_bytes"] == 0
+
+
+def test_tpu_and_cpu_hashers_agree(rng):
+    """Same digests (and therefore dedup) from the kernel and hashlib."""
+    data = rng.integers(0, 256, 40_000, dtype=np.uint8).tobytes()
+    sai_t, mgr_t, _ = _sai(ca="fixed", hasher="tpu")
+    sai_c, mgr_c, _ = _sai(ca="fixed", hasher="cpu")
+    sai_t.write("/f", data)
+    sai_c.write("/f", data)
+    assert set(mgr_t.block_registry) == set(mgr_c.block_registry)

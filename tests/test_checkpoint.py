@@ -1,0 +1,104 @@
+"""Content-addressable checkpointing: roundtrip, dedup-across-steps (the
+paper's checkpoint workload), async save, and supervised restart."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import SAI, SAIConfig, CrystalTPU, make_store
+from repro.data import make_pipeline
+from repro.models.model import build_model
+from repro.optim import make_optimizer, make_schedule
+from repro.train.checkpoint import CACheckpointer
+from repro.train.fault import TrainSupervisor
+from repro.train.trainstep import make_train_step
+
+
+def _ckpt(ca="cdc-gear"):
+    mgr, _ = make_store(3, replication=2)
+    sai = SAI(mgr, SAIConfig(ca=ca, avg_chunk=16 << 10, min_chunk=4 << 10,
+                             max_chunk=64 << 10, hasher="cpu"))
+    return CACheckpointer(sai), mgr
+
+
+def test_roundtrip(rng):
+    ckpt, _ = _ckpt()
+    params = {"a": np.arange(1000, dtype=np.float32).reshape(10, 100),
+              "b": {"c": np.ones((3, 3), np.float32)}}
+    ckpt.save(7, params)
+    step, state, _ = ckpt.restore()
+    assert step == 7
+    np.testing.assert_array_equal(state["params"]["a"], params["a"])
+    np.testing.assert_array_equal(state["params"]["b"]["c"],
+                                  params["b"]["c"])
+
+
+def test_dedup_across_steps(rng):
+    """Successive checkpoints dedup on their UNCHANGED regions (frozen /
+    slow-moving tensors).  Note (documented in DESIGN.md): a dense
+    optimizer step perturbs every element, so byte-level dedup of a fully
+    updated fp32 tensor is ~0 — the paper's 76-90% checkpoint similarity
+    comes from unchanged pages; the ML analogue is frozen layers,
+    unchanged tensors, and repeated/restarted saves."""
+    ckpt, mgr = _ckpt()
+    big = rng.standard_normal(300_000).astype(np.float32)
+    r1 = ckpt.save(0, {"w": big})
+    # contiguous 5% region changes (e.g. unfrozen head on a frozen trunk)
+    big2 = big.copy()
+    big2[:big.size // 20] += 0.1
+    r2 = ckpt.save(1, {"w": big2})
+    assert r1["dedup_ratio"] < 0.05          # first save: all new
+    assert r2["dedup_ratio"] > 0.7, r2       # incremental save: mostly dup
+    # identical re-save (restart duplicate): 100% dedup
+    r3 = ckpt.save(2, {"w": big2})
+    assert r3["new_bytes"] == 0
+    # all restorable
+    _, s0, _ = ckpt.restore(version=0)
+    _, s1, _ = ckpt.restore(version=1)
+    np.testing.assert_array_equal(s0["params"]["w"], big)
+    np.testing.assert_array_equal(s1["params"]["w"], big2)
+
+
+def test_async_save(rng):
+    ckpt, _ = _ckpt()
+    params = {"w": rng.standard_normal(10_000).astype(np.float32)}
+    t = ckpt.async_save(3, params)
+    ckpt.wait()
+    step, state, _ = ckpt.restore()
+    assert step == 3
+    np.testing.assert_array_equal(state["params"]["w"], params["w"])
+
+
+def test_supervisor_restart_recovers_training():
+    """Inject a failure; the supervisor restores from the checkpoint and
+    the run completes with decreasing loss."""
+    cfg = get_smoke_config("llama3-8b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = make_optimizer("adamw", make_schedule("cosine", 1e-3, 40))
+    opt_state = opt.init(params)
+    pipeline = make_pipeline(cfg, 64, 4)
+    step_fn = jax.jit(make_train_step(model, opt))
+    ckpt, _ = _ckpt()
+    sup = TrainSupervisor(step_fn, pipeline, ckpt, ckpt_every=5,
+                          async_ckpt=False, fail_at_steps={12: 1})
+    params, opt_state = sup.run(params, opt_state, 0, 20)
+    assert sup.restarts == 1
+    steps = [r["step"] for r in sup.log]
+    # failure at 12 -> restore to checkpoint at 10 -> steps 10/11 re-run
+    assert steps.count(10) == 2 and steps.count(11) == 2
+    assert steps.count(12) == 1 and steps[-1] == 19
+    losses = [r["loss"] for r in sup.log]
+    assert losses[-1] < losses[0]
+
+
+def test_elastic_reshard_same_stream():
+    from repro.train.fault import elastic_reshard
+    cfg = get_smoke_config("llama3-8b")
+    p4 = make_pipeline(cfg, 64, 8, num_shards=1)
+    b_full = p4.batch(5)["tokens"]
+    p2 = elastic_reshard(p4, 2)
+    b0 = p2.batch(5)["tokens"]
+    assert b0.shape[0] == 4
+    np.testing.assert_array_equal(b_full[:4], b0)

@@ -1,0 +1,61 @@
+"""CrystalTPU runtime: queueing, callbacks, ablation-equivalence."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import CrystalTPU
+from repro.kernels import ops
+
+
+@pytest.fixture(scope="module")
+def crystal():
+    c = CrystalTPU()
+    yield c
+    c.shutdown()
+
+
+def test_stream_of_jobs(crystal, rng):
+    bufs = [rng.integers(0, 256, 8192, dtype=np.uint8) for _ in range(6)]
+    jobs = crystal.map_stream("direct", bufs, {"seg_bytes": 4096})
+    for j, b in zip(jobs, bufs):
+        got = j.wait()
+        want = ops.direct_hash(b.reshape(2, 4096))
+        np.testing.assert_array_equal(got, want)
+    assert crystal.stats["jobs"] >= 6
+
+
+def test_callbacks_fire(crystal, rng):
+    done = threading.Event()
+    res = {}
+
+    def cb(job):
+        res["r"] = job.result
+        done.set()
+
+    crystal.submit("gear", rng.integers(0, 256, 4096, dtype=np.uint8),
+                   {}, callback=cb)
+    assert done.wait(timeout=120)
+    assert res["r"].shape == (4096,)
+
+
+def test_error_propagation(crystal):
+    job = crystal.submit("nonsense", np.zeros(4, np.uint8), {})
+    with pytest.raises(ValueError):
+        job.wait()
+
+
+@pytest.mark.parametrize("reuse,overlap", [(True, True), (False, False),
+                                           (True, False), (False, True)])
+def test_ablations_equivalent_results(rng, reuse, overlap):
+    """Optimization toggles change performance, never results."""
+    c = CrystalTPU(buffer_reuse=reuse, overlap=overlap, n_slots=2)
+    try:
+        buf = rng.integers(0, 256, 8192, dtype=np.uint8)
+        job = c.submit("sliding", buf, {"window": 48, "stride": 4})
+        got = job.wait()
+        want = ops.sliding_window_hash(buf.tobytes(), 48, 4)
+        np.testing.assert_array_equal(got, want)
+        assert set(job.timings) == {"in", "kernel", "out"}
+    finally:
+        c.shutdown()

@@ -1,0 +1,25 @@
+"""Merkle-tree integrity."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.integrity import merkle_proof, merkle_root, merkle_verify
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.binary(min_size=16, max_size=16), min_size=1,
+                max_size=33))
+def test_proofs_verify(leaves):
+    root = merkle_root(leaves)
+    for i, leaf in enumerate(leaves):
+        proof = merkle_proof(leaves, i)
+        assert merkle_verify(leaf, i, proof, root)
+
+
+def test_tamper_detected():
+    leaves = [bytes([i]) * 16 for i in range(9)]
+    root = merkle_root(leaves)
+    proof = merkle_proof(leaves, 4)
+    assert merkle_verify(leaves[4], 4, proof, root)
+    assert not merkle_verify(b"x" * 16, 4, proof, root)
+    other_root = merkle_root(leaves[:-1])
+    assert not merkle_verify(leaves[4], 4, proof, other_root)

@@ -1,0 +1,58 @@
+"""Flash-attention forward kernel vs naive softmax oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attn import flash_attention_fwd
+
+
+def _naive_causal(q, k, v):
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    S, Sk = q.shape[1], k.shape[1]
+    mask = jnp.arange(Sk)[None, :] <= jnp.arange(S)[:, None]
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+
+
+@pytest.mark.parametrize("S,hd,bq,bk", [(256, 64, 64, 128),
+                                        (512, 32, 128, 256),
+                                        (128, 128, 128, 128)])
+def test_flash_matches_naive(rng, S, hd, bq, bk):
+    BH = 3
+    q = jnp.asarray(rng.standard_normal((BH, S, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((BH, S, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((BH, S, hd)), jnp.float32)
+    got = flash_attention_fwd(q, k, v, bq=bq, bk=bk)
+    want = _naive_causal(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_bf16(rng):
+    BH, S, hd = 2, 256, 64
+    q = jnp.asarray(rng.standard_normal((BH, S, hd)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((BH, S, hd)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((BH, S, hd)), jnp.bfloat16)
+    got = flash_attention_fwd(q, k, v, bq=128, bk=128)
+    want = _naive_causal(q.astype(jnp.float32), k.astype(jnp.float32),
+                         v.astype(jnp.float32))
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), atol=3e-2, rtol=3e-2)
+
+
+def test_flash_under_jit(rng):
+    BH, S, hd = 2, 256, 64
+    q = jnp.asarray(rng.standard_normal((BH, S, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((BH, S, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((BH, S, hd)), jnp.float32)
+    f = jax.jit(lambda a, b, c: flash_attention_fwd(a, b, c, bq=128,
+                                                    bk=128))
+    got = f(q, k, v)
+    want = _naive_causal(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)

@@ -1,0 +1,45 @@
+"""Sliding-window MD5 kernel vs per-window hashlib (paper-faithful CDC)."""
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+
+
+@pytest.mark.parametrize("stride", [1, 2, 4])
+def test_sliding_vs_hashlib(rng, stride):
+    L, w = 2500, 48
+    buf = rng.integers(0, 256, L, dtype=np.uint8)
+    h = ops.sliding_window_hash(buf.tobytes(), window=w, stride=stride)
+    n_off = (L - w) // stride + 1
+    assert h.shape == (n_off,)
+    idx = list(rng.integers(0, n_off, 12)) + [0, n_off - 1]
+    for o in idx:
+        bo = int(o) * stride
+        want = int.from_bytes(
+            hashlib.md5(buf[bo:bo + w].tobytes()).digest()[:4], "little")
+        assert int(h[o]) == want, (stride, o)
+
+
+@pytest.mark.parametrize("window", [16, 32, 48])
+def test_sliding_window_sizes(rng, window):
+    L = 1200
+    buf = rng.integers(0, 256, L, dtype=np.uint8)
+    h = ops.sliding_window_hash(buf.tobytes(), window=window, stride=4)
+    for o in [0, 7, (L - window) // 4]:
+        bo = o * 4
+        want = int.from_bytes(
+            hashlib.md5(buf[bo:bo + window].tobytes()).digest()[:4],
+            "little")
+        assert int(h[o]) == want
+
+
+def test_sliding_matches_ref(rng):
+    import jax.numpy as jnp
+    from repro.kernels import ref
+    L = 800
+    buf = rng.integers(0, 256, L, dtype=np.uint8)
+    got = ops.sliding_window_hash(buf.tobytes(), window=48, stride=1)
+    want = np.asarray(ref.sliding_md5_ref(jnp.asarray(buf), 48, 1))
+    np.testing.assert_array_equal(got, want)
