@@ -1,0 +1,18 @@
+PYTHON ?= python
+
+.PHONY: test test-fast dev-deps bench
+
+dev-deps:
+	$(PYTHON) -m pip install -r requirements-dev.txt
+
+# tier-1 verify (ROADMAP.md)
+test:
+	PYTHONPATH=src $(PYTHON) -m pytest -x -q
+
+test-fast:
+	PYTHONPATH=src $(PYTHON) -m pytest -x -q tests/test_crystal.py \
+		tests/test_offload_engine.py tests/test_castore.py \
+		tests/test_checkpoint.py tests/test_chunking.py
+
+bench:
+	PYTHONPATH=src:. $(PYTHON) benchmarks/run.py

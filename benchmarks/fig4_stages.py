@@ -1,12 +1,19 @@
 """Figure 4: per-stage time breakdown of sliding-window hashing WITHOUT
 CrystalTPU optimizations (alloc/copy-in dominates the paper's GPU runs at
-80-96%; we measure the same staged pipeline on this host)."""
+80-96%; we measure the same staged pipeline on this host), plus the
+engine's request-coalescing ablation: a burst of small direct-hash
+requests dispatched per-request vs fused into batched launches."""
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
 from benchmarks.common import Row, synth_data
 from repro.core import CrystalTPU
+
+BURST = 16
+BURST_SEG = 16 << 10
 
 
 def run() -> list:
@@ -25,6 +32,31 @@ def run() -> list:
                 pct = 100 * t[stage] / total
                 rows.append((f"fig4/stage_{stage}/{size>>10}KB",
                              t[stage] * 1e6, f"{pct:.1f}%_of_total"))
+        finally:
+            c.shutdown()
+
+    # coalescing ablation: same burst of BURST small direct requests,
+    # per-request launches vs fused batch launches
+    bufs = [np.frombuffer(synth_data(BURST_SEG, seed=i), np.uint8)
+            for i in range(BURST)]
+    for coalesce in (False, True):
+        c = CrystalTPU(coalesce=coalesce, coalesce_window_s=0.02)
+        try:
+            # warm both the per-request and the fused batch shapes
+            for j in c.map_stream("direct", bufs, {"seg_bytes": 4096}):
+                j.wait()
+            s0 = c.snapshot_stats()
+            t0 = time.perf_counter()
+            jobs = c.map_stream("direct", bufs, {"seg_bytes": 4096})
+            for j in jobs:
+                j.wait()
+            t = time.perf_counter() - t0
+            s1 = c.snapshot_stats()
+            launches = s1["launches"] - s0["launches"]
+            njobs = s1["jobs"] - s0["jobs"]
+            label = "fused" if coalesce else "per_request"
+            rows.append((f"fig4/coalesce_{label}", t / BURST * 1e6,
+                         f"launches={launches}_jobs={njobs}"))
         finally:
             c.shutdown()
     return rows

@@ -1,0 +1,39 @@
+"""Version-compat shims for JAX APIs that moved between releases.
+
+The ``jax.tree`` namespace (``jax.tree.map`` etc.) was introduced in
+newer JAX releases, and individual functions landed at different
+versions — e.g. ``jax.tree.flatten_with_path`` is missing from installs
+that already have ``jax.tree.map``.  Every function here prefers the
+``jax.tree`` spelling and falls back to the long-stable
+``jax.tree_util.tree_*`` equivalent, so models/train/serve code runs
+unmodified across the JAX versions we see in CI and dev machines.
+"""
+from __future__ import annotations
+
+import jax
+import jax.tree_util as _tu
+
+
+def _resolve(name: str):
+    tree_ns = getattr(jax, "tree", None)
+    fn = getattr(tree_ns, name, None) if tree_ns is not None else None
+    if fn is not None:
+        return fn
+    return getattr(_tu, "tree_" + name)
+
+
+tree_map = _resolve("map")
+tree_leaves = _resolve("leaves")
+tree_flatten = _resolve("flatten")
+tree_unflatten = _resolve("unflatten")
+tree_structure = _resolve("structure")
+tree_flatten_with_path = _resolve("flatten_with_path")
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` returns a dict in newer JAX releases
+    and a per-device list of dicts in older ones; normalize to a dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}

@@ -4,6 +4,6 @@ the CrystalTPU task runtime, the MosaStore-analog CA store and client SAI,
 plus chunking / integrity substrates."""
 from repro.core.castore import (MetadataManager, StorageNode, BlockMeta,  # noqa: F401
                                 NodeFailure, make_store)
-from repro.core.crystal import CrystalTPU, Job  # noqa: F401
-from repro.core.sai import SAI, SAIConfig, WriteStats  # noqa: F401
+from repro.core.crystal import CrystalTPU, Job, default_engine  # noqa: F401
+from repro.core.sai import SAI, SAIConfig, WriteFuture, WriteStats  # noqa: F401
 from repro.core import chunking, integrity  # noqa: F401

@@ -108,7 +108,15 @@ class MetadataManager:
             self.block_registry[digest] = tuple(sorted(prev | set(nodes)))
 
     def lookup_block(self, digest: bytes) -> Tuple[int, ...]:
-        return self.block_registry.get(digest, ())
+        with self._lock:
+            return self.block_registry.get(digest, ())
+
+    def lookup_blocks(self, digests) -> Dict[bytes, Tuple[int, ...]]:
+        """Indexed digest->locations lookup for a whole write's digests
+        under a single lock acquisition (the dedup fast path)."""
+        with self._lock:
+            reg = self.block_registry
+            return {d: reg[d] for d in digests if d in reg}
 
     # -- block-maps ----------------------------------------------------------
     def commit_blockmap(self, path: str, blocks: List[BlockMeta],
@@ -119,13 +127,19 @@ class MetadataManager:
 
     def get_blockmap(self, path: str,
                      version: int = -1) -> Optional[FileVersion]:
-        versions = self.files.get(path)
-        if not versions:
-            return None
-        return versions[version]
+        with self._lock:
+            versions = self.files.get(path)
+            if not versions:
+                return None
+            return versions[version]
+
+    def num_versions(self, path: str) -> int:
+        with self._lock:
+            return len(self.files.get(path, ()))
 
     def list_files(self) -> List[str]:
-        return sorted(self.files)
+        with self._lock:
+            return sorted(self.files)
 
     # -- failure handling ----------------------------------------------------
     def handle_node_failure(self, node_id: int) -> int:

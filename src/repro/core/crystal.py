@@ -1,23 +1,51 @@
-"""CrystalTPU — the accelerator task-management runtime (CrystalGPU analog).
+"""CrystalTPU — the generalized offload engine (CrystalGPU analog).
 
 The paper's CrystalGPU layer sits between the storage system and the GPU
-runtime and provides three application-agnostic optimizations:
-  (1) buffer reuse   — amortize (pinned) buffer allocation across a stream
-                       of hashing jobs,
+runtime and provides application-agnostic optimizations that make hashing
+offload pay off:
+  (1) buffer reuse   — amortize (pinned) staging-buffer allocation across
+                       a stream of hashing jobs,
   (2) transfer/compute overlap — pipeline H2D copy of job i+1 with the
                        kernel of job i,
-  (3) transparent multi-device — round-robin dispatch over all devices.
+  (3) transparent multi-device — round-robin dispatch over all devices,
+  (4) request coalescing — fuse many small outstanding ``direct`` hash
+                       requests (concurrent writers, checkpoint leaves)
+                       into ONE padded batch kernel launch, so per-launch
+                       overhead is amortized over the whole burst.
+
+Engine structure (same master/manager-thread/queue design as CrystalGPU):
+an idle queue of preallocated job slots, an outstanding queue of submitted
+jobs, one manager thread per device, and completion callbacks.  Each
+manager drains the outstanding queue: it takes one job, then greedily
+pulls every further compatible ``direct`` job that is already queued (plus
+stragglers within ``coalesce_window_s``) and executes the whole batch as a
+single kernel launch.  ``stats["launches"] < stats["jobs"]`` is the
+signature of a fused burst.
+
+Data stays device-resident from ``device_put`` through the kernel: hosts
+prepare word-packed staging buffers, the device buffer is handed straight
+to the jit'd kernel entry points (``ops.*_device``), and only the (small)
+digest/fingerprint output is pulled back to the host — the seed's
+``np.asarray(dev_buf)`` host round-trip before every launch is gone.
 
 TPU/JAX adaptation: JAX's runtime is asynchronous by design, so overlap is
 expressed by *not* synchronizing between stage boundaries (async dispatch
 pipelines transfer and compute), while the no-overlap baseline inserts
 ``block_until_ready`` after every stage — mirroring the paper's staged
-Table-1 execution.  Buffer reuse keeps a free-list of device-resident
-input buffers that are re-filled in place (donated on dispatch) instead of
-allocating + copying fresh host arrays per job.  The same master/manager-
-thread/queue structure as CrystalGPU is kept: an idle queue of
-preallocated job slots, an outstanding queue of submitted jobs, one
-manager thread per device, and completion callbacks.
+Table-1 execution.
+
+Job normal forms
+----------------
+  'direct'  : data = [n, w] uint8 rows (w % 4 == 0) and meta['lens'] =
+              [n] byte lengths (multiples of 4, <= w); result [n, 16]
+              uint8 digests.  Legacy form: data = flat uint8 buffer plus
+              meta['seg_bytes'] — split into fixed segments, word-aligned
+              tail.  Coalescing fuses any mix of direct jobs: rows are
+              zero-padded to the widest row in the batch (digests are
+              length-bound, so trailing zeros never change them).
+  'sliding' : data = flat uint8 buffer, meta {'window', 'stride'};
+              result [n_offsets] uint32 window hashes.
+  'gear'    : data = flat uint8 buffer; result [len] uint32 rolling hash.
 """
 from __future__ import annotations
 
@@ -43,6 +71,9 @@ class Job:
     error: Optional[BaseException] = None
     done: threading.Event = field(default_factory=threading.Event)
     timings: Dict[str, float] = field(default_factory=dict)
+    # normalized 'direct' payload (set at submit time)
+    rows: Optional[np.ndarray] = None
+    lens: Optional[np.ndarray] = None
 
     def wait(self):
         self.done.wait()
@@ -51,29 +82,65 @@ class Job:
         return self.result
 
 
-class CrystalTPU:
-    """Task-management engine for hashing offload.
+def _normalize_direct(data: np.ndarray, meta: Dict[str, Any]):
+    """Return (rows [n, w] uint8, lens [n] int64) for a direct request."""
+    data = np.asarray(data)
+    if data.ndim == 2:
+        rows = data.astype(np.uint8, copy=False)
+        lens = meta.get("lens")
+        if lens is None:
+            lens = np.full((rows.shape[0],), rows.shape[1], np.int64)
+        else:
+            lens = np.asarray(lens, np.int64)
+        return rows, lens
+    seg = int(meta.get("seg_bytes", 4096))
+    flat = data.reshape(-1).astype(np.uint8, copy=False)
+    n = max((flat.size + seg - 1) // seg, 1)
+    rows = np.zeros((n, seg), np.uint8)
+    rows.reshape(-1)[:flat.size] = flat
+    lens = np.full((n,), seg, np.int64)
+    tail = flat.size - (n - 1) * seg
+    lens[-1] = (tail + 3) // 4 * 4
+    return rows, lens
 
-    Parameters mirror the paper's ablation switches:
-      buffer_reuse: keep and reuse job input buffers (idle queue)
-      overlap:      async dispatch (no per-stage synchronization)
-      devices:      accelerators to round-robin over (default: all)
+
+class CrystalTPU:
+    """Coalescing offload engine for hashing jobs.
+
+    Parameters mirror the paper's ablation switches plus coalescing:
+      buffer_reuse:      keep and reuse staging buffers (idle queue)
+      overlap:           async dispatch (no per-stage synchronization)
+      devices:           accelerators to round-robin over (default: all)
+      coalesce:          fuse queued 'direct' jobs into one batch launch
+      max_batch:         max jobs fused into a single launch
+      coalesce_window_s: extra wait for stragglers once the queue is
+                         empty.  Default 0: fusion only captures jobs
+                         already queued behind a running launch, so a
+                         lone synchronous write never stalls waiting
+                         for writers that don't exist; raise it for
+                         bursty many-writer workloads.
     """
 
     def __init__(self, devices=None, buffer_reuse: bool = True,
                  overlap: bool = True, n_slots: int = 8,
-                 interpret: bool = True):
+                 interpret: bool = True, coalesce: bool = True,
+                 max_batch: int = 64, coalesce_window_s: float = 0.0):
         self.devices = list(devices if devices is not None
                             else jax.devices())
         self.buffer_reuse = buffer_reuse
         self.overlap = overlap
         self.interpret = interpret
+        self.coalesce = coalesce
+        self.max_batch = max(1, int(max_batch))
+        self.coalesce_window_s = coalesce_window_s
         self.outstanding: "queue.Queue[Optional[Job]]" = queue.Queue()
         self.idle: "queue.Queue[dict]" = queue.Queue()
         for _ in range(n_slots):
-            self.idle.put({})          # slot: device-buffer cache by shape
+            self.idle.put({})          # slot: staging-buffer cache by shape
         self.running: List[Job] = []
         self._lock = threading.Lock()
+        self.stats = {"jobs": 0, "bytes": 0, "launches": 0,
+                      "coalesced": 0, "max_fused": 0}
         self._managers = [
             threading.Thread(target=self._manager_loop, args=(d,),
                              daemon=True, name=f"crystal-mgr-{i}")
@@ -81,13 +148,18 @@ class CrystalTPU:
         self._alive = True
         for t in self._managers:
             t.start()
-        self.stats = {"jobs": 0, "bytes": 0}
 
+    # ------------------------------------------------------------------
+    # submission API
     # ------------------------------------------------------------------
     def submit(self, kind: str, data: np.ndarray, meta=None,
                callback=None) -> Job:
+        if not self._alive:
+            raise RuntimeError("CrystalTPU engine is shut down")
         job = Job(kind=kind, data=np.asarray(data), meta=meta or {},
                   callback=callback)
+        if kind == "direct":
+            job.rows, job.lens = _normalize_direct(job.data, job.meta)
         self.outstanding.put(job)
         return job
 
@@ -96,6 +168,10 @@ class CrystalTPU:
         streaming workload) and return the job list."""
         return [self.submit(kind, b, meta) for b in buffers]
 
+    def snapshot_stats(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(self.stats)
+
     def shutdown(self):
         self._alive = False
         for _ in self._managers:
@@ -103,6 +179,8 @@ class CrystalTPU:
         for t in self._managers:
             t.join(timeout=5)
 
+    # ------------------------------------------------------------------
+    # manager internals
     # ------------------------------------------------------------------
     def _get_slot(self) -> dict:
         if self.buffer_reuse:
@@ -119,81 +197,183 @@ class CrystalTPU:
             jax.block_until_ready(x)
         return x
 
+    def _staging(self, slot: dict, shape, dtype) -> np.ndarray:
+        """Host staging buffer: reused from the slot cache, or a fresh
+        allocation per job (the paper's unoptimized malloc-per-task)."""
+        if not self.buffer_reuse:
+            return np.zeros(shape, dtype)
+        key = (shape, np.dtype(dtype).str)
+        buf = slot.get(key)
+        if buf is None:
+            buf = np.zeros(shape, dtype)
+            slot[key] = buf
+        else:
+            buf.fill(0)
+        return buf
+
+    def _drain_batch(self, first: Job):
+        """Greedy coalescing: pull queued direct jobs behind ``first``.
+        Returns (batch, carry) where carry is a non-fusable job that was
+        popped and must be executed next."""
+        batch = [first]
+        if not (self.coalesce and first.kind == "direct"):
+            return batch, None
+        deadline = time.perf_counter() + self.coalesce_window_s
+        while len(batch) < self.max_batch:
+            try:
+                nxt = self.outstanding.get_nowait()
+            except queue.Empty:
+                wait = deadline - time.perf_counter()
+                if wait <= 0:
+                    break
+                try:
+                    nxt = self.outstanding.get(timeout=wait)
+                except queue.Empty:
+                    break
+            if nxt is None:               # shutdown token: repost + stop
+                self.outstanding.put(None)
+                break
+            if nxt.kind != "direct":
+                return batch, nxt
+            batch.append(nxt)
+        return batch, None
+
     def _manager_loop(self, device):
-        while self._alive:
-            job = self.outstanding.get()
-            if job is None:
-                return
+        # terminates only on its shutdown token, never on the _alive
+        # flag: a carried (popped-but-unfused) job must still execute
+        # even if shutdown() lands while the previous batch runs
+        carry: Optional[Job] = None
+        while True:
+            if carry is not None:
+                job, carry = carry, None
+            else:
+                job = self.outstanding.get()
+                if job is None:
+                    return
+            batch, carry = self._drain_batch(job)
             slot = self._get_slot()
-            t0 = time.perf_counter()
             try:
                 with self._lock:
-                    self.running.append(job)
-                # stage 1-2: buffer (re)use + transfer in.  With reuse, a
-                # persistent staging buffer per slot is refilled in place
-                # (the analogue of reusing pinned host memory); without, a
-                # fresh staging allocation is made per job (the paper's
-                # unoptimized malloc-per-task path).
-                key = (job.data.shape, str(job.data.dtype))
-                if self.buffer_reuse:
-                    staging = slot.get(key)
-                    if staging is None:
-                        staging = np.empty_like(job.data)
-                        slot[key] = staging
-                    np.copyto(staging, job.data)
+                    self.running.extend(batch)
+                if job.kind == "direct":
+                    self._execute_direct(device, slot, batch)
                 else:
-                    staging = np.array(job.data)     # fresh alloc + copy
-                buf = staging
-                dev_buf = jax.device_put(buf, device)
-                self._stage_sync(dev_buf)
-                t1 = time.perf_counter()
-                # stage 3: kernel
-                result = self._run_kernel(job, dev_buf)
-                self._stage_sync(result)
-                t2 = time.perf_counter()
-                # stage 4: transfer out (numpy conversion pulls to host)
-                host = jax.tree.map(np.asarray, result)
-                t3 = time.perf_counter()
-                job.result = host
-                job.timings = {"in": t1 - t0, "kernel": t2 - t1,
-                               "out": t3 - t2}
-                with self._lock:
-                    self.stats["jobs"] += 1
-                    self.stats["bytes"] += buf.nbytes
-            except BaseException as e:              # surfaced via wait()
-                job.error = e
+                    self._execute_stream(device, slot, batch[0])
+            except BaseException as e:          # surfaced via wait()
+                for j in batch:
+                    j.error = e
             finally:
                 with self._lock:
-                    if job in self.running:
-                        self.running.remove(job)
+                    for j in batch:
+                        if j in self.running:
+                            self.running.remove(j)
                 self._put_slot(slot)
-                job.done.set()
-                if job.callback is not None:
-                    try:
-                        job.callback(job)
-                    except Exception:
-                        pass
+                for j in batch:
+                    j.done.set()
+                    if j.callback is not None:
+                        try:
+                            j.callback(j)
+                        except Exception:
+                            pass
 
-    # ------------------------------------------------------------------
-    def _run_kernel(self, job: Job, dev_buf):
-        kind = job.kind
-        meta = job.meta
-        if kind == "direct":
-            seg = meta.get("seg_bytes", 4096)
-            data = np.asarray(dev_buf)
-            n = (len(data) + seg - 1) // seg
-            padded = np.zeros((n, seg), np.uint8)
-            flat = data.reshape(-1)
-            padded.reshape(-1)[:flat.size] = flat
-            lens = np.full((n,), seg, np.int64)
-            tail = flat.size - (n - 1) * seg
-            lens[-1] = (tail + 3) // 4 * 4
-            return ops.direct_hash(padded, lens, interpret=self.interpret)
-        if kind == "sliding":
-            return ops.sliding_window_hash(
-                np.asarray(dev_buf), window=meta.get("window", 48),
-                stride=meta.get("stride", 4), interpret=self.interpret)
-        if kind == "gear":
-            return ops.gear_hash(np.asarray(dev_buf),
-                                 interpret=self.interpret)
-        raise ValueError(f"unknown job kind {kind!r}")
+    def _account(self, n_jobs: int, nbytes: int):
+        with self._lock:
+            self.stats["jobs"] += n_jobs
+            self.stats["bytes"] += nbytes
+            self.stats["launches"] += 1
+            self.stats["coalesced"] += n_jobs - 1
+            self.stats["max_fused"] = max(self.stats["max_fused"], n_jobs)
+
+    # -- fused direct batch --------------------------------------------
+    def _execute_direct(self, device, slot: dict, batch: List[Job]):
+        t0 = time.perf_counter()
+        # stage 1-2: staging + transfer in.  One padded [B, W] batch for
+        # the whole burst; rows are length-bound so zero padding to the
+        # widest row never changes a digest.  B and W are bucketed to
+        # powers of two to bound jit retraces across ragged bursts.
+        W = max(j.rows.shape[1] for j in batch)
+        W = 1 << (max(W, 4) - 1).bit_length()
+        n_rows = sum(j.rows.shape[0] for j in batch)
+        B = 1 << (max(n_rows, 1) - 1).bit_length()
+        staging = self._staging(slot, (B, W), np.uint8)
+        lens = np.zeros((B,), np.int64)
+        r = 0
+        for j in batch:
+            n, w = j.rows.shape
+            staging[r:r + n, :w] = j.rows
+            lens[r:r + n] = j.lens
+            r += n
+        words = staging.view("<u4") if staging.flags.c_contiguous \
+            else np.ascontiguousarray(staging).view("<u4")
+        dev_words = jax.device_put(words, device)
+        dev_lens = jax.device_put((lens // 4).astype(np.int32), device)
+        self._stage_sync(dev_words)
+        t1 = time.perf_counter()
+        # stage 3: ONE kernel launch for the fused batch, device-resident
+        dig = ops.direct_hash_device(dev_words, dev_lens,
+                                     interpret=self.interpret)
+        self._stage_sync(dig)
+        t2 = time.perf_counter()
+        # stage 4: transfer out (digests only — 16 B per row)
+        host = ops.digest_bytes(dig)
+        t3 = time.perf_counter()
+        timings = {"in": t1 - t0, "kernel": t2 - t1, "out": t3 - t2}
+        r = 0
+        for j in batch:
+            n = j.rows.shape[0]
+            j.result = host[r:r + n].copy()
+            j.timings = dict(timings)       # batch-wide stage times
+            r += n
+        self._account(len(batch), int(np.sum(lens)))
+
+    # -- single streaming job (sliding / gear) -------------------------
+    def _execute_stream(self, device, slot: dict, job: Job):
+        t0 = time.perf_counter()
+        flat = job.data.reshape(-1).astype(np.uint8, copy=False)
+        L = flat.size
+        pad = (-L) % 4
+        staging = self._staging(slot, ((L + pad) // 4,), np.uint32)
+        staging.view(np.uint8)[:L] = flat
+        dev_words = jax.device_put(staging, device)
+        self._stage_sync(dev_words)
+        t1 = time.perf_counter()
+        if job.kind == "sliding":
+            window = job.meta.get("window", 48)
+            stride = job.meta.get("stride", 4)
+            phases = tuple(range(0, 4, stride))
+            out = ops.sliding_hash_device(dev_words, window // 4, phases,
+                                          interpret=self.interpret)
+            self._stage_sync(out)
+            t2 = time.perf_counter()
+            n_off = (L - window) // stride + 1
+            host = ops.sliding_finish(np.asarray(out), phases, n_off)
+        elif job.kind == "gear":
+            out = ops.gear_hash_device(dev_words,
+                                       interpret=self.interpret)
+            self._stage_sync(out)
+            t2 = time.perf_counter()
+            host = ops.gear_finish(np.asarray(out), L)
+        else:
+            raise ValueError(f"unknown job kind {job.kind!r}")
+        t3 = time.perf_counter()
+        job.result = host
+        job.timings = {"in": t1 - t0, "kernel": t2 - t1, "out": t3 - t2}
+        self._account(1, L)
+
+
+# ----------------------------------------------------------------------
+# process-wide default engine: shared across SAIs so concurrent writers'
+# requests coalesce into common launches
+# ----------------------------------------------------------------------
+_DEFAULT: Optional[CrystalTPU] = None
+_DEFAULT_LOCK = threading.Lock()
+
+
+def default_engine() -> CrystalTPU:
+    """The process-wide shared offload engine (created on first use,
+    recreated if a previous default was shut down)."""
+    global _DEFAULT
+    with _DEFAULT_LOCK:
+        if _DEFAULT is None or not _DEFAULT._alive:
+            _DEFAULT = CrystalTPU()
+        return _DEFAULT

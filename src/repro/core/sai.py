@@ -2,11 +2,22 @@
 
 Implements the paper's write path (Figure 3): buffered writes are chunked
 (fixed-size or content-based via the accelerator), chunk hashes are
-computed by HashTPU through CrystalTPU, compared against the previous
-version's block-map for similarity detection, and only novel blocks are
-striped over the storage nodes.  The read path re-hashes fetched blocks
-(implicit integrity check of content addressing) and falls back to block
-replicas on node failure.
+computed by HashTPU through the CrystalTPU offload engine, compared
+against the block registry's indexed digest->locations map for similarity
+detection, and only novel blocks are striped over the storage nodes.  The
+read path re-hashes fetched blocks (implicit integrity check of content
+addressing) and falls back to block replicas on node failure.
+
+All hashing — direct block digests, sliding-window CDC, gear CDC — flows
+through the offload engine (``SAI.engine``); an SAI constructed without an
+explicit engine shares the process-wide default so concurrent writers'
+hash requests coalesce into common batch launches.
+
+Async pipeline (paper Table 1, overlapped execution): ``write_async``
+returns a :class:`WriteFuture` and runs chunk -> hash -> store as staged
+pipeline threads, so the chunk/hash stages of write i+1 overlap the store
+stage of write i, and the engine fuses the resulting burst of hash
+requests into batched kernel launches.
 
 Configurations mirror the paper's evaluation matrix:
   ca='none'                 -> non-CA (direct write, no hashing)
@@ -19,6 +30,8 @@ Configurations mirror the paper's evaluation matrix:
 from __future__ import annotations
 
 import hashlib
+import queue
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -26,9 +39,9 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core import chunking
+from repro.core import crystal as crystal_mod
 from repro.core.castore import BlockMeta, MetadataManager, NodeFailure
 from repro.core.crystal import CrystalTPU
-from repro.kernels import ops
 
 
 @dataclass
@@ -58,7 +71,54 @@ class WriteStats:
         return self.dup_blocks / total if total else 0.0
 
 
+class WriteFuture:
+    """Handle for an in-flight pipelined write; resolves to WriteStats."""
+
+    def __init__(self):
+        self._done = threading.Event()
+        self._stats: Optional[WriteStats] = None
+        self._error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> WriteStats:
+        if not self._done.wait(timeout):
+            raise TimeoutError("write still in flight")
+        if self._error is not None:
+            raise self._error
+        return self._stats
+
+    wait = result
+
+    def _resolve(self, stats: WriteStats):
+        self._stats = stats
+        self._done.set()
+
+    def _fail(self, error: BaseException):
+        self._error = error
+        self._done.set()
+
+
+class _HashHandle:
+    """Uniform handle over an in-flight chunk-digest computation: either
+    host digests computed eagerly (cpu / infinite / empty input) or an
+    offload-engine job whose result is materialized on wait()."""
+
+    def __init__(self, job: Optional[crystal_mod.Job] = None,
+                 digests: Optional[List[bytes]] = None):
+        self._job = job
+        self._digests = digests
+
+    def wait(self) -> List[bytes]:
+        if self._digests is None:
+            rows = self._job.wait()                 # [n, 16] uint8
+            self._digests = [rows[i].tobytes() for i in range(rows.shape[0])]
+        return self._digests
+
+
 _ORACLE_COUNTER = [0]
+_ORACLE_LOCK = threading.Lock()
 
 
 class SAI:
@@ -67,51 +127,73 @@ class SAI:
         self.manager = manager
         self.cfg = config
         self.crystal = crystal
+        self._pipe_lock = threading.Lock()
+        self._chunk_q: Optional[queue.Queue] = None
+        self._store_q: Optional[queue.Queue] = None
+        self._pipe_threads: List[threading.Thread] = []
 
     # ------------------------------------------------------------------
-    # hashing backends
+    # hashing backends — everything flows through the offload engine
     # ------------------------------------------------------------------
-    def _hash_chunks(self, chunks: List[bytes]) -> List[bytes]:
-        cfg = self.cfg
-        if cfg.hasher in ("infinite", "cpu"):
-            # 'infinite' is the paper's CA-Infinite oracle — its hashing
-            # time is excluded from the timed stages by the caller.
-            return [block_digest_cpu(c) for c in chunks]
-        # tpu: batch via HashTPU direct hashing.  Canonical block digest =
-        # MD5( zero-pad-to-word(data) || u32_le(byte_length) ): the length
-        # trailer disambiguates chunks that differ only in trailing zero
-        # padding (CDC boundaries are byte-exact).
+    @property
+    def engine(self) -> CrystalTPU:
+        """The offload engine: the explicit one, else the process-wide
+        shared default (so independent writers coalesce)."""
+        if self.crystal is None:
+            self.crystal = crystal_mod.default_engine()
+        return self.crystal
+
+    def _pack_chunks(self, chunks: List[bytes]):
+        """Pack chunks into padded rows for a direct-hash request.
+
+        Canonical block digest = MD5( zero-pad-to-word(data) ||
+        u32_le(byte_length) ): the length trailer disambiguates chunks
+        that differ only in trailing zero padding (CDC boundaries are
+        byte-exact).  Row width is bucketed to a power of two to bound
+        jit retraces across writes with ragged max-chunk lengths."""
         seg = max(len(c) for c in chunks)
         seg = (seg + 3) // 4 * 4 + 4
-        # bucket the padded width to a power of two: bounds jit retraces
-        # across writes with ragged max-chunk lengths
         seg = 1 << (seg - 1).bit_length()
-        arr = np.zeros((len(chunks), seg), np.uint8)
+        rows = np.zeros((len(chunks), seg), np.uint8)
         lens = np.zeros((len(chunks),), np.int64)
         for i, c in enumerate(chunks):
             padded = (len(c) + 3) // 4 * 4
-            arr[i, :len(c)] = np.frombuffer(c, np.uint8)
-            arr[i, padded:padded + 4] = np.frombuffer(
+            rows[i, :len(c)] = np.frombuffer(c, np.uint8)
+            rows[i, padded:padded + 4] = np.frombuffer(
                 np.uint32(len(c)).tobytes(), np.uint8)
             lens[i] = padded + 4
-        digs = ops.direct_hash(arr, lens)
-        return [digs[i].tobytes() for i in range(len(chunks))]
+        return rows, lens
+
+    def _submit_hash(self, chunks: List[bytes]) -> _HashHandle:
+        """Start hashing ``chunks``; non-blocking on the tpu path."""
+        if not chunks:
+            return _HashHandle(digests=[])
+        if self.cfg.hasher in ("infinite", "cpu"):
+            # 'infinite' is the paper's CA-Infinite oracle — its hashing
+            # time is excluded from the timed stages by the caller.
+            return _HashHandle(digests=[block_digest_cpu(c)
+                                        for c in chunks])
+        rows, lens = self._pack_chunks(chunks)
+        return _HashHandle(job=self.engine.submit(
+            "direct", rows, {"lens": lens}))
+
+    def _hash_chunks(self, chunks: List[bytes]) -> List[bytes]:
+        return self._submit_hash(chunks).wait()
 
     def _boundaries(self, data: bytes) -> List[int]:
         cfg = self.cfg
+        if len(data) == 0:
+            return []
         if cfg.ca == "fixed":
             n = (len(data) + cfg.block_size - 1) // cfg.block_size
             return [min((i + 1) * cfg.block_size, len(data))
                     for i in range(n)]
         if cfg.ca == "cdc":
-            if cfg.hasher == "tpu" and self.crystal is not None:
-                job = self.crystal.submit(
+            if cfg.hasher == "tpu":
+                job = self.engine.submit(
                     "sliding", np.frombuffer(data, np.uint8),
                     {"window": cfg.window, "stride": cfg.stride})
                 hashes = job.wait()
-            elif cfg.hasher == "tpu":
-                hashes = ops.sliding_window_hash(
-                    data, window=cfg.window, stride=cfg.stride)
             else:
                 hashes = _cpu_sliding(data, cfg.window, cfg.stride)
             return chunking.select_boundaries(
@@ -119,12 +201,10 @@ class SAI:
                 avg_chunk=cfg.avg_chunk, min_chunk=cfg.min_chunk,
                 max_chunk=cfg.max_chunk)
         if cfg.ca == "cdc-gear":
-            if cfg.hasher == "tpu" and self.crystal is not None:
-                job = self.crystal.submit(
+            if cfg.hasher == "tpu":
+                job = self.engine.submit(
                     "gear", np.frombuffer(data, np.uint8), {})
                 hashes = job.wait()
-            elif cfg.hasher == "tpu":
-                hashes = ops.gear_hash(data)
             else:
                 hashes = _cpu_gear(data)
             return chunking.select_boundaries(
@@ -134,65 +214,174 @@ class SAI:
         raise ValueError(self.cfg.ca)
 
     # ------------------------------------------------------------------
-    # write path
+    # store stage (shared by sync write, async pipeline, checkpointer)
     # ------------------------------------------------------------------
-    def write(self, path: str, data: bytes) -> WriteStats:
-        cfg = self.cfg
-        stats = WriteStats(total_bytes=len(data))
+    def _store_chunks(self, path: str, total_len: int,
+                      chunks: List[bytes], digests: List[bytes],
+                      stats: WriteStats) -> WriteStats:
+        """Dedup against the indexed digest->locations registry, store
+        novel blocks, commit the block-map."""
         mgr = self.manager
-
-        if cfg.ca == "none":
-            t0 = time.perf_counter()
-            bs = cfg.block_size
-            blocks = []
-            for i in range(0, max(len(data), 1), bs):
-                chunk = data[i:i + bs]
-                _ORACLE_COUNTER[0] += 1
-                digest = b"raw!" + _ORACLE_COUNTER[0].to_bytes(12, "little")
-                locs = mgr.place(digest)
-                for nid in locs:
-                    mgr.nodes[nid].put(digest, chunk)
-                mgr.register_block(digest, locs)
-                blocks.append(BlockMeta(digest, len(chunk), locs))
-                stats.new_blocks += 1
-                stats.new_bytes += len(chunk)
-            mgr.commit_blockmap(path, blocks, len(data))
-            stats.stage_s = {"store": time.perf_counter() - t0}
-            return stats
-
-        t0 = time.perf_counter()
-        bounds = self._boundaries(data)
-        chunks = chunking.split_chunks(data, bounds)
-        t1 = time.perf_counter()
-        if cfg.hasher == "infinite":
-            digests = self._hash_chunks(chunks)
-            t2 = t1                      # oracle: hashing is free
-        else:
-            digests = self._hash_chunks(chunks)
-            t2 = time.perf_counter()
-
-        prev = mgr.get_blockmap(path)
-        known = {b.digest for b in prev.blocks} if prev else set()
-
+        locmap = mgr.lookup_blocks(digests)       # one lock acquisition
         blocks: List[BlockMeta] = []
         for chunk, digest in zip(chunks, digests):
-            if digest in known or mgr.lookup_block(digest):
-                locs = mgr.lookup_block(digest) or \
-                    next(b.nodes for b in prev.blocks if b.digest == digest)
+            locs = locmap.get(digest)
+            if locs:
                 stats.dup_blocks += 1
             else:
                 locs = mgr.place(digest)
                 for nid in locs:
                     mgr.nodes[nid].put(digest, chunk)
                 mgr.register_block(digest, locs)
+                locmap[digest] = locs             # intra-write dups
                 stats.new_blocks += 1
                 stats.new_bytes += len(chunk)
             blocks.append(BlockMeta(digest, len(chunk), tuple(locs)))
+        mgr.commit_blockmap(path, blocks, total_len)
+        return stats
+
+    def _write_raw(self, path: str, data: bytes) -> WriteStats:
+        """ca='none': direct striping, no hashing (synthetic digests)."""
+        cfg, mgr = self.cfg, self.manager
+        stats = WriteStats(total_bytes=len(data))
+        t0 = time.perf_counter()
+        bs = cfg.block_size
+        blocks = []
+        for i in range(0, max(len(data), 1), bs):
+            chunk = data[i:i + bs]
+            with _ORACLE_LOCK:
+                _ORACLE_COUNTER[0] += 1
+                n = _ORACLE_COUNTER[0]
+            digest = b"raw!" + n.to_bytes(12, "little")
+            locs = mgr.place(digest)
+            for nid in locs:
+                mgr.nodes[nid].put(digest, chunk)
+            mgr.register_block(digest, locs)
+            blocks.append(BlockMeta(digest, len(chunk), locs))
+            stats.new_blocks += 1
+            stats.new_bytes += len(chunk)
         mgr.commit_blockmap(path, blocks, len(data))
+        stats.stage_s = {"store": time.perf_counter() - t0}
+        return stats
+
+    # ------------------------------------------------------------------
+    # write paths
+    # ------------------------------------------------------------------
+    def write(self, path: str, data: bytes) -> WriteStats:
+        cfg = self.cfg
+        if cfg.ca == "none":
+            return self._write_raw(path, data)
+        stats = WriteStats(total_bytes=len(data))
+        t0 = time.perf_counter()
+        bounds = self._boundaries(data)
+        chunks = chunking.split_chunks(data, bounds)
+        t1 = time.perf_counter()
+        digests = self._submit_hash(chunks).wait()
+        t2 = t1 if cfg.hasher == "infinite" else time.perf_counter()
+        self._store_chunks(path, len(data), chunks, digests, stats)
         t3 = time.perf_counter()
         stats.stage_s = {"chunk": t1 - t0, "hash": t2 - t1,
                          "store": t3 - t2}
         return stats
+
+    def write_async(self, path: str, data: bytes) -> WriteFuture:
+        """Pipelined write: chunk+hash of this write overlap the store
+        stage of the previous one (and hash requests from back-to-back
+        writes coalesce in the engine).  Commit order matches submission
+        order, so versioning is identical to sequential sync writes."""
+        fut = WriteFuture()
+        with self._pipe_lock:
+            self._ensure_pipeline()
+            self._chunk_q.put((fut, path, bytes(data)))
+        return fut
+
+    def flush(self):
+        """Block until every pipelined write has committed."""
+        with self._pipe_lock:
+            chunk_q, store_q = self._chunk_q, self._store_q
+        if chunk_q is not None:
+            chunk_q.join()
+            store_q.join()
+
+    def close(self):
+        """Drain and stop the pipeline threads (idempotent).  In-flight
+        writes complete first; a later write_async restarts the
+        pipeline.  SAIs that only use sync ``write`` have no threads."""
+        with self._pipe_lock:
+            chunk_q, threads = self._chunk_q, self._pipe_threads
+            self._chunk_q = self._store_q = None
+            self._pipe_threads = []
+        if chunk_q is None:
+            return
+        chunk_q.put(None)            # chunk worker forwards to store
+        for t in threads:
+            t.join(timeout=60)
+
+    def _ensure_pipeline(self):
+        # caller holds _pipe_lock
+        if self._chunk_q is not None:
+            return
+        self._chunk_q = queue.Queue()
+        self._store_q = queue.Queue()
+        self._pipe_threads = [
+            threading.Thread(target=target, args=(self._chunk_q,
+                                                  self._store_q),
+                             daemon=True, name=name)
+            for name, target in (("sai-chunk", self._chunk_loop),
+                                 ("sai-store", self._store_loop))]
+        for t in self._pipe_threads:
+            t.start()
+
+    def _chunk_loop(self, chunk_q, store_q):
+        while True:
+            item = chunk_q.get()
+            if item is None:                         # close() sentinel
+                store_q.put(None)
+                chunk_q.task_done()
+                return
+            fut, path, data = item
+            try:
+                if self.cfg.ca == "none":
+                    store_q.put((fut, path, data, None, None, {}))
+                    continue
+                t0 = time.perf_counter()
+                bounds = self._boundaries(data)
+                chunks = chunking.split_chunks(data, bounds)
+                t1 = time.perf_counter()
+                handle = self._submit_hash(chunks)   # non-blocking (tpu)
+                store_q.put((fut, path, data, chunks, handle,
+                             {"chunk": t1 - t0, "t_hash0": t1}))
+            except BaseException as e:
+                fut._fail(e)
+            finally:
+                chunk_q.task_done()
+
+    def _store_loop(self, chunk_q, store_q):
+        while True:
+            item = store_q.get()
+            if item is None:                         # close() sentinel
+                store_q.task_done()
+                return
+            fut, path, data, chunks, handle, times = item
+            try:
+                if handle is None:                   # ca='none'
+                    fut._resolve(self._write_raw(path, data))
+                    continue
+                stats = WriteStats(total_bytes=len(data))
+                digests = handle.wait()
+                t2 = time.perf_counter()
+                self._store_chunks(path, len(data), chunks, digests,
+                                   stats)
+                t3 = time.perf_counter()
+                hash_s = 0.0 if self.cfg.hasher == "infinite" \
+                    else t2 - times["t_hash0"]
+                stats.stage_s = {"chunk": times["chunk"],
+                                 "hash": hash_s, "store": t3 - t2}
+                fut._resolve(stats)
+            except BaseException as e:
+                fut._fail(e)
+            finally:
+                store_q.task_done()
 
     # ------------------------------------------------------------------
     # read path

@@ -5,6 +5,16 @@ phase strip construction and output interleaving live here so the kernels
 stay shape-regular.  ``interpret=True`` (the CPU default here) executes
 the kernel bodies in Python via the Pallas interpreter; on TPU the same
 calls lower to Mosaic.
+
+Two layers are exposed:
+  * convenience wrappers (``direct_hash``, ``sliding_window_hash``,
+    ``gear_hash``) that take host arrays and do prep + launch + finish;
+  * device-resident entry points (``direct_hash_device``,
+    ``sliding_hash_device``, ``gear_hash_device``) plus host-side finish
+    helpers (``digest_bytes``, ``sliding_finish``, ``gear_finish``) used
+    by the CrystalTPU offload engine, which manages its own staging
+    buffers and ``device_put`` so data stays on the accelerator from
+    transfer through kernel with no host round-trip.
 """
 from __future__ import annotations
 
@@ -43,6 +53,21 @@ def _direct_hash_words(data: jax.Array, lens_w: jax.Array,
     return dig.T[:N]
 
 
+def direct_hash_device(words: jax.Array, lens_w: jax.Array,
+                       interpret: bool = True) -> jax.Array:
+    """Device-resident direct hashing: ``words`` [N, W] uint32 already on
+    the target device, ``lens_w`` [N] int32 word lengths.  Returns the
+    [N, 4] uint32 digest array *on device* (callers pull it with
+    ``digest_bytes`` — 16 B/row, the only host transfer)."""
+    return _direct_hash_words(words, lens_w, interpret=interpret)
+
+
+def digest_bytes(dig) -> np.ndarray:
+    """[N, 4] uint32 digests (device or host) -> [N, 16] uint8 host."""
+    dig = np.asarray(dig)
+    return dig.astype("<u4").view(np.uint8).reshape(dig.shape[0], 16)
+
+
 def direct_hash(segments: np.ndarray, lens_bytes=None,
                 interpret: bool = True) -> np.ndarray:
     """MD5 digests of N word-aligned segments.
@@ -63,10 +88,9 @@ def direct_hash(segments: np.ndarray, lens_bytes=None,
         lens_bytes = np.asarray(lens_bytes)
         assert np.all(lens_bytes % 4 == 0)
         lens_w = (lens_bytes // 4).astype(np.int32)
-    dig = np.asarray(_direct_hash_words(jnp.asarray(segments),
-                                        jnp.asarray(lens_w),
-                                        interpret=interpret))
-    return dig.astype("<u4").view(np.uint8).reshape(N, 16)
+    dig = direct_hash_device(jnp.asarray(segments), jnp.asarray(lens_w),
+                             interpret=interpret)
+    return digest_bytes(dig)
 
 
 def hash_blocks(data: bytes, block_bytes: int,
@@ -130,6 +154,26 @@ def _sliding_hash_words(words: jax.Array, w_words: int,
     return out[:, 0, :]                                      # digest word a
 
 
+def sliding_hash_device(words: jax.Array, w_words: int,
+                        phases: Tuple[int, ...],
+                        interpret: bool = True) -> jax.Array:
+    """Device-resident sliding-window hashing: ``words`` [L] uint32 on
+    the target device.  Returns the [R, Wc] uint32 per-phase hash matrix
+    on device; ``sliding_finish`` interleaves it host-side."""
+    return _sliding_hash_words(words, w_words, phases,
+                               interpret=interpret)
+
+
+def sliding_finish(out: np.ndarray, phases: Tuple[int, ...],
+                   n_off: int) -> np.ndarray:
+    """Interleave phase rows: offset o = 4q + phases[r] -> out[r, q]."""
+    R, Wc = out.shape
+    inter = np.empty((Wc * R,), np.uint32)
+    for i, r in enumerate(phases):
+        inter[i::R] = out[i]
+    return inter[:n_off]
+
+
 def sliding_window_hash(data: bytes | np.ndarray, window: int = 48,
                         stride: int = 1,
                         interpret: bool = True) -> np.ndarray:
@@ -145,14 +189,9 @@ def sliding_window_hash(data: bytes | np.ndarray, window: int = 48,
     pad = (-L) % 4
     words = jnp.asarray(np.pad(buf, (0, pad)).view("<u4"))
     phases = tuple(range(0, 4, stride))
-    out = np.asarray(_sliding_hash_words(words, window // 4, phases,
+    out = np.asarray(sliding_hash_device(words, window // 4, phases,
                                          interpret=interpret))  # [R, Wc]
-    # interleave: offset o = 4q + phases[r]  ->  out[r, q]
-    R, Wc = out.shape
-    inter = np.empty((Wc * R,), np.uint32)
-    for i, r in enumerate(phases):
-        inter[i::R] = out[i]
-    return inter[:n_off]
+    return sliding_finish(out, phases, n_off)
 
 
 # --------------------------------------------------------------------------
@@ -170,6 +209,19 @@ def _gear_hash_words(words: jax.Array, interpret: bool = True,
     return out
 
 
+def gear_hash_device(words: jax.Array, interpret: bool = True,
+                     version: int = 1) -> jax.Array:
+    """Device-resident gear hashing: ``words`` [L] uint32 on the target
+    device.  Returns the [4, w_cap] uint32 phase matrix on device;
+    ``gear_finish`` flattens it host-side."""
+    return _gear_hash_words(words, interpret=interpret, version=version)
+
+
+def gear_finish(out: np.ndarray, n_bytes: int) -> np.ndarray:
+    """Flatten [4, w_cap] phase matrix to per-byte order (4q + r)."""
+    return out.T.reshape(-1)[:n_bytes]
+
+
 def gear_hash(data: bytes | np.ndarray, interpret: bool = True,
               version: int = 1) -> np.ndarray:
     """Windowed gear hash at every byte position.  Returns [L] uint32.
@@ -183,7 +235,6 @@ def gear_hash(data: bytes | np.ndarray, interpret: bool = True,
     L = len(buf)
     pad = (-L) % 4
     words = jnp.asarray(np.pad(buf, (0, pad)).view("<u4"))
-    out = np.asarray(_gear_hash_words(words, interpret=interpret,
+    out = np.asarray(gear_hash_device(words, interpret=interpret,
                                       version=version))
-    h = out.T.reshape(-1)                                    # 4q + r order
-    return h[:L]
+    return gear_finish(out, L)

@@ -30,6 +30,8 @@ import time
 import traceback
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 
 from repro.configs import ARCH_NAMES, get_config, get_shape
@@ -177,7 +179,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
             v = getattr(mem, k, None)
             if v is not None:
                 mem_d[k] = int(v)
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_analysis(compiled)
     cost_d = {k: float(v) for k, v in cost.items()
               if isinstance(v, (int, float)) and k in
               ("flops", "bytes accessed", "transcendentals",

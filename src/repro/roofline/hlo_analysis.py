@@ -44,6 +44,7 @@ _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _COND_BODY_RE = re.compile(
     r"condition=%?(?P<cond>[\w.\-]+)|body=%?(?P<body>[\w.\-]+)")
 _CALLS_RE = re.compile(r"calls=%?(?P<name>[\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?(?P<name>[\w.\-]+)")
 _CONST_RE = re.compile(r"constant\((\d+)\)")
 _LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
@@ -170,6 +171,14 @@ def _multipliers(comps, entry) -> Dict[str, float]:
                 if mc:
                     mult[mc.group("name")] += mult[name]
                     order.append(mc.group("name"))
+            elif i.op == "call":
+                # XLA:CPU wraps parallelized fusions in call ops
+                # (e.g. %call = ... call(...), to_apply=%parallel_...);
+                # heavy ops inside must inherit the caller's multiplier
+                ma = _TO_APPLY_RE.search(i.line)
+                if ma and ma.group("name") in comps:
+                    mult[ma.group("name")] += mult[name]
+                    order.append(ma.group("name"))
     return dict(mult)
 
 

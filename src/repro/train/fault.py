@@ -20,6 +20,8 @@ import time
 from typing import Callable, Dict, List, Optional
 
 import jax
+
+from repro import compat
 import numpy as np
 
 
@@ -95,7 +97,7 @@ class TrainSupervisor:
 
 def _cast_like(template, restored):
     """Restore numpy state into the template pytree's dtypes/devices."""
-    return jax.tree.map(
+    return compat.tree_map(
         lambda t, r: jax.numpy.asarray(r, dtype=t.dtype), template, restored)
 
 

@@ -1,0 +1,74 @@
+"""Make ``hypothesis`` optional for the tier-1 suite.
+
+Re-exports ``given`` / ``settings`` / ``strategies`` / ``HealthCheck``
+from the real hypothesis when it is installed.  Otherwise provides a
+deterministic fallback: each ``@given`` test runs ``max_examples`` times
+over examples drawn from a seeded PRNG via minimal strategy stand-ins
+(only the strategy surface this test suite uses: ``binary`` and
+``lists``).  Property coverage is thinner than real hypothesis (no
+shrinking, no edge-case bias) but the invariants still execute on every
+machine, with or without the dev extra installed.
+"""
+try:
+    from hypothesis import HealthCheck, given, settings, strategies
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # thin fallback
+    HAVE_HYPOTHESIS = False
+    import functools
+    import inspect
+    import random
+
+    class HealthCheck:
+        large_base_example = "large_base_example"
+        data_too_large = "data_too_large"
+        too_slow = "too_slow"
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example_from(self, rnd):
+            return self._draw(rnd)
+
+    class _Strategies:
+        @staticmethod
+        def binary(min_size=0, max_size=64):
+            def draw(rnd):
+                return rnd.randbytes(rnd.randint(min_size, max_size))
+            return _Strategy(draw)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=8):
+            def draw(rnd):
+                n = rnd.randint(min_size, max_size)
+                return [elements.example_from(rnd) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            def draw(rnd):
+                return rnd.randint(min_value, max_value)
+            return _Strategy(draw)
+
+    strategies = _Strategies()
+
+    def settings(max_examples=10, **_kwargs):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rnd = random.Random(0)
+                for _ in range(getattr(wrapper, "_max_examples", 10)):
+                    drawn = [s.example_from(rnd) for s in strats]
+                    fn(*args, *drawn, **kwargs)
+            # hide the drawn parameters from pytest's fixture resolution
+            params = list(inspect.signature(fn).parameters.values())
+            n_keep = len(params) - len(strats)
+            wrapper.__signature__ = inspect.Signature(params[:n_keep])
+            return wrapper
+        return deco

@@ -1,7 +1,7 @@
 """CA store + SAI system invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypcompat import given, settings, strategies as st
 
 from repro.core import SAI, SAIConfig, NodeFailure, make_store
 

@@ -1,6 +1,6 @@
 """Chunking invariants (property-based)."""
 import numpy as np
-from hypothesis import HealthCheck, given, settings, strategies as st
+from _hypcompat import HealthCheck, given, settings, strategies as st
 
 from repro.core import chunking
 from repro.kernels import ops

@@ -1,6 +1,6 @@
 """Merkle-tree integrity."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypcompat import given, settings, strategies as st
 
 from repro.core.integrity import merkle_proof, merkle_root, merkle_verify
 

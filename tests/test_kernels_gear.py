@@ -2,7 +2,7 @@
 sequential FastCDC recurrence."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypcompat import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 from repro.core.sai import _cpu_gear
