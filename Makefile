@@ -1,6 +1,6 @@
 PYTHON ?= python
 
-.PHONY: test test-fast dev-deps bench
+.PHONY: test test-fast dev-deps bench bench-smoke
 
 dev-deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -16,3 +16,11 @@ test-fast:
 
 bench:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/run.py
+
+# tiny-size perf smoke (CI): exercises the engine/pipeline benchmark
+# paths and leaves the CSV in bench-smoke.csv for the artifact upload
+# (redirect, don't pipe: a module failure must fail the make target)
+bench-smoke:
+	BENCH_SMOKE=1 PYTHONPATH=src:. $(PYTHON) benchmarks/run.py \
+		fig4 fig11 read > bench-smoke.csv
+	@cat bench-smoke.csv

@@ -8,12 +8,22 @@ speedup, throughput MB/s, similarity %, ...).
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import Callable, List, Tuple
 
 import numpy as np
 
 Row = Tuple[str, float, str]
+
+# BENCH_SMOKE=1 shrinks every module's problem sizes so the whole harness
+# runs in CI on every PR (make bench-smoke) — same code paths, tiny data.
+SMOKE = os.environ.get("BENCH_SMOKE", "0") not in ("", "0")
+
+
+def scaled(full, tiny):
+    """Pick the full-size or smoke-size variant of a bench parameter."""
+    return tiny if SMOKE else full
 
 
 def timeit(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:

@@ -10,18 +10,19 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import checkpoint_series, mbps
+from benchmarks.common import checkpoint_series, mbps, scaled
 from repro.core import CrystalTPU, SAI, SAIConfig, make_store
 
-N_IMAGES = 4
-IMAGE_MB = 2
+N_IMAGES = scaled(4, 3)
+IMAGE_MB = scaled(2, 0.25)
 
 
 def run() -> list:
     rows: list = []
-    images = checkpoint_series(N_IMAGES, IMAGE_MB << 20, change_frac=0.15)
+    images = checkpoint_series(N_IMAGES, int(IMAGE_MB * (1 << 20)),
+                               change_frac=0.15)
     size_total = sum(len(i) for i in images)
-    for block in (16 << 10, 64 << 10):
+    for block in scaled((16 << 10, 64 << 10), (16 << 10,)):
         for ca in ("fixed", "cdc-gear"):
             for hasher in ("cpu", "tpu"):
                 mgr, _ = make_store(4)
@@ -32,22 +33,38 @@ def run() -> list:
                 sai = SAI(mgr, cfg, crystal=engine)
                 t0 = time.perf_counter()
                 sims = []
+                stage_s = {}
                 futs = [sai.write_async("/ckpt/image", img)
                         for img in images]
                 for i, fut in enumerate(futs):
                     st = fut.result()
                     if i:
                         sims.append(st.similarity)
+                    for stage, sec in st.stage_s.items():
+                        stage_s[stage] = stage_s.get(stage, 0.0) + sec
                 t = time.perf_counter() - t0
                 sai.close()
                 sim = 100 * sum(sims) / len(sims)
                 label = "fixed" if ca == "fixed" else "CB"
+                name = f"fig11/{label}_{hasher}/{block>>10}KB"
                 derived = f"{mbps(size_total, t):.1f}MBps_sim={sim:.0f}%"
                 if engine is not None:
                     s = engine.snapshot_stats()
                     derived += (f"_launches={s['launches']}"
                                 f"/jobs={s['jobs']}")
+                    # engine launch/coalesce counters as their own CSV
+                    # rows so fused-launch regressions show up in the
+                    # perf trajectory directly
+                    for key in ("launches", "jobs", "coalesced",
+                                "max_fused"):
+                        rows.append((f"{name}/engine_{key}", 0.0,
+                                     str(s[key])))
                     engine.shutdown()
-                rows.append((f"fig11/{label}_{hasher}/{block>>10}KB",
-                             t / N_IMAGES * 1e6, derived))
+                rows.append((name, t / N_IMAGES * 1e6, derived))
+                # per-stage pipeline time (WriteStats.stage_s, summed
+                # over the image burst)
+                for stage, sec in sorted(stage_s.items()):
+                    rows.append((f"{name}/stage_{stage}",
+                                 sec / N_IMAGES * 1e6,
+                                 f"{100 * sec / max(t, 1e-12):.1f}%_of_wall"))
     return rows

@@ -1,24 +1,27 @@
 """Figure 4: per-stage time breakdown of sliding-window hashing WITHOUT
 CrystalTPU optimizations (alloc/copy-in dominates the paper's GPU runs at
 80-96%; we measure the same staged pipeline on this host), plus the
-engine's request-coalescing ablation: a burst of small direct-hash
-requests dispatched per-request vs fused into batched launches."""
+engine's request-coalescing ablations: a burst of small direct-hash
+requests — and a burst of same-config sliding stream jobs (CDC chunking
+burst) — dispatched per-request vs fused into batched launches."""
 from __future__ import annotations
 
 import time
 
 import numpy as np
 
-from benchmarks.common import Row, synth_data
+from benchmarks.common import Row, scaled, synth_data
 from repro.core import CrystalTPU
 
-BURST = 16
-BURST_SEG = 16 << 10
+BURST = scaled(16, 8)
+BURST_SEG = scaled(16 << 10, 4 << 10)
+STREAM_BURST = scaled(8, 4)
+STREAM_LEN = scaled(64 << 10, 8 << 10)
 
 
 def run() -> list:
     rows: list = []
-    for size in (256 << 10, 1 << 20):
+    for size in scaled((256 << 10, 1 << 20), (64 << 10,)):
         c = CrystalTPU(buffer_reuse=False, overlap=False, n_slots=2)
         try:
             data = np.frombuffer(synth_data(size), np.uint8)
@@ -56,6 +59,32 @@ def run() -> list:
             njobs = s1["jobs"] - s0["jobs"]
             label = "fused" if coalesce else "per_request"
             rows.append((f"fig4/coalesce_{label}", t / BURST * 1e6,
+                         f"launches={launches}_jobs={njobs}"))
+        finally:
+            c.shutdown()
+
+    # stream-coalescing ablation: a CDC chunking burst of same-config
+    # sliding jobs, per-request launches vs one fused [B, L] launch
+    sbufs = [np.frombuffer(synth_data(STREAM_LEN, seed=100 + i), np.uint8)
+             for i in range(STREAM_BURST)]
+    meta = {"window": 48, "stride": 4}
+    for coalesce in (False, True):
+        c = CrystalTPU(coalesce=coalesce, coalesce_window_s=0.02)
+        try:
+            for j in c.map_stream("sliding", sbufs, meta):    # warm shapes
+                j.wait()
+            s0 = c.snapshot_stats()
+            t0 = time.perf_counter()
+            jobs = c.map_stream("sliding", sbufs, meta)
+            for j in jobs:
+                j.wait()
+            t = time.perf_counter() - t0
+            s1 = c.snapshot_stats()
+            launches = s1["launches"] - s0["launches"]
+            njobs = s1["jobs"] - s0["jobs"]
+            label = "fused" if coalesce else "per_request"
+            rows.append((f"fig4/stream_coalesce_{label}",
+                         t / STREAM_BURST * 1e6,
                          f"launches={launches}_jobs={njobs}"))
         finally:
             c.shutdown()

@@ -1,7 +1,12 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV.  Select subsets with
-``python -m benchmarks.run fig5 fig11``.
+``python -m benchmarks.run fig5 fig11``.  Pipeline-stage rows
+(``.../stage_*`` from ``WriteStats.stage_s``) and engine
+launch/coalesce counter rows (``.../engine_*``) ride along with their
+figure's throughput rows so fused-launch regressions are visible in the
+perf trajectory.  ``BENCH_SMOKE=1`` (the ``make bench-smoke`` CI target)
+shrinks every module's sizes so the whole harness runs on each PR.
 """
 from __future__ import annotations
 
@@ -14,6 +19,7 @@ MODULES = [
     "benchmarks.fig6_direct",
     "benchmarks.fig7_10_workloads",
     "benchmarks.fig11_checkpoint",
+    "benchmarks.read_path",
     "benchmarks.fig12_17_competing",
     "benchmarks.sec4_2_cpu_vs_accel",
     "benchmarks.kernel_roofline",

@@ -5,5 +5,6 @@ plus chunking / integrity substrates."""
 from repro.core.castore import (MetadataManager, StorageNode, BlockMeta,  # noqa: F401
                                 NodeFailure, make_store)
 from repro.core.crystal import CrystalTPU, Job, default_engine  # noqa: F401
-from repro.core.sai import SAI, SAIConfig, WriteFuture, WriteStats  # noqa: F401
+from repro.core.sai import (SAI, SAIConfig, ReadFuture, WriteFuture,  # noqa: F401
+                            WriteStats)
 from repro.core import chunking, integrity  # noqa: F401

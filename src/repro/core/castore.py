@@ -82,6 +82,7 @@ class MetadataManager:
         self.replication = max(1, replication)
         self.files: Dict[str, List[FileVersion]] = {}
         self.block_registry: Dict[bytes, Tuple[int, ...]] = {}
+        self._claims: Dict[bytes, threading.Event] = {}
         self._rr = 0
         self._lock = threading.Lock()
 
@@ -118,6 +119,48 @@ class MetadataManager:
             reg = self.block_registry
             return {d: reg[d] for d in digests if d in reg}
 
+    def claim_blocks(self, digests):
+        """Atomic dedup decision for a whole write's digests under one
+        lock: returns (locmap, claimed, waits) where ``locmap`` maps
+        already-stored digests to locations, ``claimed`` is the set of
+        digests this caller won the right (and duty) to store — it MUST
+        call ``finish_claim`` for each, even on failure — and ``waits``
+        maps digests being stored right now by a concurrent writer to
+        events that fire when that store completes or aborts.  Prevents
+        the check-then-act race where two store lanes both see a digest
+        as absent and double-store the block."""
+        locmap: Dict[bytes, Tuple[int, ...]] = {}
+        claimed = set()
+        waits: Dict[bytes, threading.Event] = {}
+        with self._lock:
+            reg = self.block_registry
+            for d in digests:
+                if d in locmap or d in claimed or d in waits:
+                    continue
+                locs = reg.get(d)
+                if locs:
+                    locmap[d] = locs
+                elif d in self._claims:
+                    waits[d] = self._claims[d]
+                else:
+                    self._claims[d] = threading.Event()
+                    claimed.add(d)
+        return locmap, claimed, waits
+
+    def finish_claim(self, digest: bytes,
+                     nodes: Optional[Tuple[int, ...]] = None):
+        """Complete (``nodes`` given: register the block) or abort
+        (``nodes=None``) a claim from ``claim_blocks``, waking waiters
+        either way."""
+        with self._lock:
+            if nodes:
+                prev = set(self.block_registry.get(digest, ()))
+                self.block_registry[digest] = tuple(sorted(prev
+                                                           | set(nodes)))
+            ev = self._claims.pop(digest, None)
+        if ev is not None:
+            ev.set()
+
     # -- block-maps ----------------------------------------------------------
     def commit_blockmap(self, path: str, blocks: List[BlockMeta],
                         total_len: int):
@@ -132,6 +175,20 @@ class MetadataManager:
             if not versions:
                 return None
             return versions[version]
+
+    def get_read_plan(self, path: str, version: int = -1):
+        """Block-map plus current replica locations for every block of a
+        file version under ONE lock acquisition (the read fast path —
+        the fetch stage avoids per-block ``lookup_block`` lock churn).
+        Returns (FileVersion | None, {digest: locations})."""
+        with self._lock:
+            versions = self.files.get(path)
+            if not versions:
+                return None, {}
+            fv = versions[version]
+            reg = self.block_registry
+            return fv, {b.digest: reg[b.digest]
+                        for b in fv.blocks if b.digest in reg}
 
     def num_versions(self, path: str) -> int:
         with self._lock:

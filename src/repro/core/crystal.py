@@ -8,19 +8,30 @@ offload pay off:
   (2) transfer/compute overlap — pipeline H2D copy of job i+1 with the
                        kernel of job i,
   (3) transparent multi-device — round-robin dispatch over all devices,
-  (4) request coalescing — fuse many small outstanding ``direct`` hash
-                       requests (concurrent writers, checkpoint leaves)
-                       into ONE padded batch kernel launch, so per-launch
-                       overhead is amortized over the whole burst.
+  (4) request coalescing — fuse many small outstanding hash requests
+                       (concurrent writers, checkpoint leaves, read-path
+                       verification) into ONE padded batch kernel launch,
+                       so per-launch overhead is amortized over the whole
+                       burst.  This covers every job kind: ``direct``
+                       rows stack into one [B, W] batch, and bursts of
+                       same-config ``sliding`` / ``gear`` stream jobs
+                       (CDC chunking bursts: checkpoint restore, many
+                       concurrent writers) stack into one padded [B, L]
+                       multi-row launch via the ``ops.*_batch_device``
+                       entry points.
 
 Engine structure (same master/manager-thread/queue design as CrystalGPU):
 an idle queue of preallocated job slots, an outstanding queue of submitted
 jobs, one manager thread per device, and completion callbacks.  Each
 manager drains the outstanding queue: it takes one job, then greedily
-pulls every further compatible ``direct`` job that is already queued (plus
-stragglers within ``coalesce_window_s``) and executes the whole batch as a
-single kernel launch.  ``stats["launches"] < stats["jobs"]`` is the
-signature of a fused burst.
+pulls every further queued job with the same fuse key — ``direct`` with
+``direct``, ``sliding`` with identical window/stride, ``gear`` with
+``gear`` — (plus stragglers within ``coalesce_window_s``) and executes
+the whole batch as a single kernel launch, slicing each job's rows out
+of the fused phase-matrix output.  Batch row counts and padded widths
+are bucketed to powers of two to bound jit retraces across ragged
+bursts.  ``stats["launches"] < stats["jobs"]`` is the signature of a
+fused burst.
 
 Data stays device-resident from ``device_put`` through the kernel: hosts
 prepare word-packed staging buffers, the device buffer is handed straight
@@ -61,8 +72,9 @@ import numpy as np
 from repro.kernels import ops
 
 
-@dataclass
-class Job:
+@dataclass(eq=False)                   # identity semantics: jobs hold
+class Job:                             # numpy fields, and the manager's
+    # running-list membership/removal must never compare array contents
     kind: str                          # 'direct' | 'sliding' | 'gear'
     data: Optional[np.ndarray] = None
     meta: Dict[str, Any] = field(default_factory=dict)
@@ -74,6 +86,12 @@ class Job:
     # normalized 'direct' payload (set at submit time)
     rows: Optional[np.ndarray] = None
     lens: Optional[np.ndarray] = None
+    # jobs with equal fuse keys may share one kernel launch
+    fuse_key: tuple = ()
+    # pow2-padded staging shape, used to bound fused-batch memory:
+    # the fused matrix is (sum n_rows) x (max staged_width) bytes
+    n_rows: int = 1
+    staged_width: int = 0
 
     def wait(self):
         self.done.wait()
@@ -111,8 +129,21 @@ class CrystalTPU:
       buffer_reuse:      keep and reuse staging buffers (idle queue)
       overlap:           async dispatch (no per-stage synchronization)
       devices:           accelerators to round-robin over (default: all)
-      coalesce:          fuse queued 'direct' jobs into one batch launch
+      coalesce:          fuse queued same-fuse-key jobs into one batch
+                         launch — 'direct' with 'direct', 'sliding' with
+                         identical window/stride, 'gear' with 'gear'
+                         (stream jobs additionally only fuse within the
+                         same buffer-size octave class, so a tiny CDC
+                         job never pads out to a huge neighbour)
       max_batch:         max jobs fused into a single launch
+      max_fused_rows:    cap on total direct rows in one fused launch —
+                         bounds the padded [B, W] staging matrix when
+                         many multi-row jobs (e.g. read-path verify
+                         slices) queue up at once
+      max_fused_bytes:   cap on one fused launch's padded staging matrix
+                         (total rows x widest pow2 row, direct AND
+                         stream): a burst of wide jobs stops fusing
+                         before the batch matrix grows past this budget
       coalesce_window_s: extra wait for stragglers once the queue is
                          empty.  Default 0: fusion only captures jobs
                          already queued behind a running launch, so a
@@ -124,7 +155,9 @@ class CrystalTPU:
     def __init__(self, devices=None, buffer_reuse: bool = True,
                  overlap: bool = True, n_slots: int = 8,
                  interpret: bool = True, coalesce: bool = True,
-                 max_batch: int = 64, coalesce_window_s: float = 0.0):
+                 max_batch: int = 64, coalesce_window_s: float = 0.0,
+                 max_fused_rows: int = 4096,
+                 max_fused_bytes: int = 64 << 20):
         self.devices = list(devices if devices is not None
                             else jax.devices())
         self.buffer_reuse = buffer_reuse
@@ -132,6 +165,8 @@ class CrystalTPU:
         self.interpret = interpret
         self.coalesce = coalesce
         self.max_batch = max(1, int(max_batch))
+        self.max_fused_rows = max(1, int(max_fused_rows))
+        self.max_fused_bytes = max(1, int(max_fused_bytes))
         self.coalesce_window_s = coalesce_window_s
         self.outstanding: "queue.Queue[Optional[Job]]" = queue.Queue()
         self.idle: "queue.Queue[dict]" = queue.Queue()
@@ -160,6 +195,28 @@ class CrystalTPU:
                   callback=callback)
         if kind == "direct":
             job.rows, job.lens = _normalize_direct(job.data, job.meta)
+            job.fuse_key = ("direct",)
+            n, w = job.rows.shape
+            job.n_rows = n
+            job.staged_width = 1 << (max(w, 4) - 1).bit_length()
+        elif kind in ("sliding", "gear"):
+            # stream jobs fuse only within a buffer-size octave class
+            # (~8x width span): rows are padded to the batch max, so
+            # fusing a 4 KB CDC job with a 64 MB one would hash ~16000x
+            # padding for the small job — the class bound keeps fusion
+            # for genuinely similar bursts
+            octave = (max(job.data.size, 1) + 3).bit_length() // 3
+            if kind == "sliding":
+                job.fuse_key = ("sliding",
+                                int(job.meta.get("window", 48)),
+                                int(job.meta.get("stride", 4)), octave)
+            else:
+                job.fuse_key = ("gear", int(job.meta.get("version", 1)),
+                                octave)
+            n_words = (max(job.data.size, 1) + 3) // 4
+            job.staged_width = 4 << (max(n_words, 4) - 1).bit_length()
+        else:
+            job.fuse_key = (kind, id(job))      # never fuses; error later
         self.outstanding.put(job)
         return job
 
@@ -212,12 +269,16 @@ class CrystalTPU:
         return buf
 
     def _drain_batch(self, first: Job):
-        """Greedy coalescing: pull queued direct jobs behind ``first``.
-        Returns (batch, carry) where carry is a non-fusable job that was
-        popped and must be executed next."""
+        """Greedy coalescing: pull queued jobs with ``first``'s fuse key
+        behind it (direct with direct, sliding with identical
+        window/stride, gear with gear).  Returns (batch, carry) where
+        carry is a non-fusable job that was popped and must be executed
+        next."""
         batch = [first]
-        if not (self.coalesce and first.kind == "direct"):
+        if not (self.coalesce and first.kind in ("direct", "sliding",
+                                                 "gear")):
             return batch, None
+        rows, width = first.n_rows, first.staged_width
         deadline = time.perf_counter() + self.coalesce_window_s
         while len(batch) < self.max_batch:
             try:
@@ -233,8 +294,20 @@ class CrystalTPU:
             if nxt is None:               # shutdown token: repost + stop
                 self.outstanding.put(None)
                 break
-            if nxt.kind != "direct":
+            if nxt.fuse_key != first.fuse_key:
                 return batch, nxt
+            # cap the fused launch by its actual padded staging matrix
+            # (every row pads to the batch-max width) and, for direct,
+            # by total rows — not just by job count: many multi-row or
+            # wide jobs must not stack into an unbounded batch
+            new_width = max(width, nxt.staged_width)
+            if (rows + nxt.n_rows) * new_width > self.max_fused_bytes:
+                return batch, nxt
+            if nxt.kind == "direct" and \
+                    rows + nxt.n_rows > self.max_fused_rows:
+                return batch, nxt
+            rows += nxt.n_rows
+            width = new_width
             batch.append(nxt)
         return batch, None
 
@@ -258,7 +331,7 @@ class CrystalTPU:
                 if job.kind == "direct":
                     self._execute_direct(device, slot, batch)
                 else:
-                    self._execute_stream(device, slot, batch[0])
+                    self._execute_stream_batch(device, slot, batch)
             except BaseException as e:          # surfaced via wait()
                 for j in batch:
                     j.error = e
@@ -326,39 +399,57 @@ class CrystalTPU:
             r += n
         self._account(len(batch), int(np.sum(lens)))
 
-    # -- single streaming job (sliding / gear) -------------------------
-    def _execute_stream(self, device, slot: dict, job: Job):
+    # -- fused streaming batch (sliding / gear) ------------------------
+    def _execute_stream_batch(self, device, slot: dict, batch: List[Job]):
+        """Execute a burst of same-config stream jobs as ONE padded
+        [B, L] multi-row kernel launch.  Rows are zero-padded to the
+        widest buffer; B and the word width are bucketed to powers of
+        two to bound retraces across ragged bursts.  Each job's hashes
+        are sliced out of the fused phase-matrix output."""
+        kind = batch[0].kind
+        if kind not in ("sliding", "gear"):
+            raise ValueError(f"unknown job kind {kind!r}")
         t0 = time.perf_counter()
-        flat = job.data.reshape(-1).astype(np.uint8, copy=False)
-        L = flat.size
-        pad = (-L) % 4
-        staging = self._staging(slot, ((L + pad) // 4,), np.uint32)
-        staging.view(np.uint8)[:L] = flat
+        flats = [j.data.reshape(-1).astype(np.uint8, copy=False)
+                 for j in batch]
+        lens = [f.size for f in flats]
+        n_words = (max(max(lens), 1) + 3) // 4
+        Wb = 1 << (max(n_words, 4) - 1).bit_length()
+        B = 1 << (len(batch) - 1).bit_length()
+        staging = self._staging(slot, (B, Wb), np.uint32)
+        rows_u8 = staging.view(np.uint8).reshape(B, Wb * 4)
+        for i, f in enumerate(flats):
+            rows_u8[i, :f.size] = f
         dev_words = jax.device_put(staging, device)
         self._stage_sync(dev_words)
         t1 = time.perf_counter()
-        if job.kind == "sliding":
-            window = job.meta.get("window", 48)
-            stride = job.meta.get("stride", 4)
+        if kind == "sliding":
+            window = int(batch[0].meta.get("window", 48))
+            stride = int(batch[0].meta.get("stride", 4))
             phases = tuple(range(0, 4, stride))
-            out = ops.sliding_hash_device(dev_words, window // 4, phases,
-                                          interpret=self.interpret)
+            out = ops.sliding_hash_batch_device(dev_words, window // 4,
+                                                phases,
+                                                interpret=self.interpret)
             self._stage_sync(out)
             t2 = time.perf_counter()
-            n_off = (L - window) // stride + 1
-            host = ops.sliding_finish(np.asarray(out), phases, n_off)
-        elif job.kind == "gear":
-            out = ops.gear_hash_device(dev_words,
-                                       interpret=self.interpret)
-            self._stage_sync(out)
-            t2 = time.perf_counter()
-            host = ops.gear_finish(np.asarray(out), L)
+            host = np.asarray(out)                       # [B, R, Wc]
+            for i, j in enumerate(batch):
+                n_off = (lens[i] - window) // stride + 1
+                j.result = ops.sliding_finish(host[i], phases, n_off)
         else:
-            raise ValueError(f"unknown job kind {job.kind!r}")
+            out = ops.gear_hash_batch_device(
+                dev_words, interpret=self.interpret,
+                version=int(batch[0].meta.get("version", 1)))
+            self._stage_sync(out)
+            t2 = time.perf_counter()
+            host = np.asarray(out)                       # [B, 4, Wc]
+            for i, j in enumerate(batch):
+                j.result = ops.gear_finish(host[i], lens[i])
         t3 = time.perf_counter()
-        job.result = host
-        job.timings = {"in": t1 - t0, "kernel": t2 - t1, "out": t3 - t2}
-        self._account(1, L)
+        timings = {"in": t1 - t0, "kernel": t2 - t1, "out": t3 - t2}
+        for j in batch:
+            j.timings = dict(timings)       # batch-wide stage times
+        self._account(len(batch), int(sum(lens)))
 
 
 # ----------------------------------------------------------------------

@@ -5,19 +5,33 @@ Implements the paper's write path (Figure 3): buffered writes are chunked
 computed by HashTPU through the CrystalTPU offload engine, compared
 against the block registry's indexed digest->locations map for similarity
 detection, and only novel blocks are striped over the storage nodes.  The
-read path re-hashes fetched blocks (implicit integrity check of content
-addressing) and falls back to block replicas on node failure.
+read path re-hashes fetched blocks (the paper's "traditional system that
+uses hashing to preserve data integrity") and falls back to block
+replicas on node failure.
 
-All hashing — direct block digests, sliding-window CDC, gear CDC — flows
-through the offload engine (``SAI.engine``); an SAI constructed without an
-explicit engine shares the process-wide default so concurrent writers'
-hash requests coalesce into common batch launches.
+All hashing — direct block digests, sliding-window CDC, gear CDC, and
+read-path verification — flows through the offload engine
+(``SAI.engine``); an SAI constructed without an explicit engine shares
+the process-wide default so concurrent writers' and readers' hash
+requests coalesce into common batch launches.
 
-Async pipeline (paper Table 1, overlapped execution): ``write_async``
-returns a :class:`WriteFuture` and runs chunk -> hash -> store as staged
-pipeline threads, so the chunk/hash stages of write i+1 overlap the store
-stage of write i, and the engine fuses the resulting burst of hash
-requests into batched kernel launches.
+Async write pipeline (paper Table 1, overlapped execution):
+``write_async`` returns a :class:`WriteFuture` and runs chunk -> hash ->
+store as staged pipeline threads, so the chunk/hash stages of write i+1
+overlap the store stage of write i, and the engine fuses the resulting
+burst of hash requests into batched kernel launches.  The store stage is
+sharded into per-path commit lanes (``SAIConfig.store_lanes``) hashed by
+path, so concurrent writers to different paths no longer serialize on a
+single store worker while commits stay in submission order per path.
+
+Read/verify pipeline: ``read`` gathers all fetched blocks and verifies
+them with ONE fused ``direct`` hash request (digest comparison on the
+host — zero per-block ``hashlib`` calls on the tpu path), instead of the
+per-block host hashing the paper shows must be amortized via batching.
+``read_async`` returns a :class:`ReadFuture` and runs fetch -> verify ->
+assemble as staged pipeline threads with replica failover retained:
+verify of read i overlaps fetch of read i+1, and concurrent readers'
+verify requests coalesce across SAIs through the shared engine.
 
 Configurations mirror the paper's evaluation matrix:
   ca='none'                 -> non-CA (direct write, no hashing)
@@ -55,6 +69,7 @@ class SAIConfig:
     stride: int = 4
     hasher: str = "tpu"               # tpu | cpu | infinite
     stripe_width: int = 4
+    store_lanes: int = 4              # parallel per-path commit lanes
 
 
 @dataclass
@@ -100,6 +115,36 @@ class WriteFuture:
         self._done.set()
 
 
+class ReadFuture:
+    """Handle for an in-flight pipelined read; resolves to the file
+    bytes (verified when the read was submitted with verify=True)."""
+
+    def __init__(self):
+        self._done = threading.Event()
+        self._data: Optional[bytes] = None
+        self._error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> bytes:
+        if not self._done.wait(timeout):
+            raise TimeoutError("read still in flight")
+        if self._error is not None:
+            raise self._error
+        return self._data
+
+    wait = result
+
+    def _resolve(self, data: bytes):
+        self._data = data
+        self._done.set()
+
+    def _fail(self, error: BaseException):
+        self._error = error
+        self._done.set()
+
+
 class _HashHandle:
     """Uniform handle over an in-flight chunk-digest computation: either
     host digests computed eagerly (cpu / infinite / empty input) or an
@@ -129,7 +174,9 @@ class SAI:
         self.crystal = crystal
         self._pipe_lock = threading.Lock()
         self._chunk_q: Optional[queue.Queue] = None
-        self._store_q: Optional[queue.Queue] = None
+        self._store_qs: Optional[List[queue.Queue]] = None
+        self._fetch_q: Optional[queue.Queue] = None
+        self._verify_q: Optional[queue.Queue] = None
         self._pipe_threads: List[threading.Thread] = []
 
     # ------------------------------------------------------------------
@@ -220,25 +267,69 @@ class SAI:
                       chunks: List[bytes], digests: List[bytes],
                       stats: WriteStats) -> WriteStats:
         """Dedup against the indexed digest->locations registry, store
-        novel blocks, commit the block-map."""
+        novel blocks, commit the block-map.
+
+        Dedup is race-free across store lanes and concurrent SAIs: one
+        atomic ``claim_blocks`` decides per digest whether it is already
+        stored, ours to store, or being stored by a concurrent writer.
+        All own claims are stored (and released) before waiting on other
+        writers' claims — a writer never holds an unfinished claim while
+        waiting, so claim waits cannot deadlock."""
         mgr = self.manager
-        locmap = mgr.lookup_blocks(digests)       # one lock acquisition
+        locmap, claimed, waits = mgr.claim_blocks(digests)
+        new_idx = set()
+        try:
+            for i, (chunk, digest) in enumerate(zip(chunks, digests)):
+                if digest in claimed:
+                    locs = mgr.place(digest)
+                    for nid in locs:
+                        mgr.nodes[nid].put(digest, chunk)
+                    mgr.finish_claim(digest, locs)
+                    claimed.remove(digest)
+                    locmap[digest] = locs
+                    new_idx.add(i)
+        finally:
+            for digest in list(claimed):         # error path: release
+                mgr.finish_claim(digest, None)
         blocks: List[BlockMeta] = []
-        for chunk, digest in zip(chunks, digests):
+        for i, (chunk, digest) in enumerate(zip(chunks, digests)):
             locs = locmap.get(digest)
-            if locs:
-                stats.dup_blocks += 1
-            else:
-                locs = mgr.place(digest)
-                for nid in locs:
-                    mgr.nodes[nid].put(digest, chunk)
-                mgr.register_block(digest, locs)
-                locmap[digest] = locs             # intra-write dups
+            if locs is None:
+                waits[digest].wait()
+                locs, is_new = self._resolve_block(digest, chunk)
+                if is_new:
+                    new_idx.add(i)
+                locmap[digest] = locs
+            if i in new_idx:
                 stats.new_blocks += 1
                 stats.new_bytes += len(chunk)
+            else:
+                stats.dup_blocks += 1
             blocks.append(BlockMeta(digest, len(chunk), tuple(locs)))
         mgr.commit_blockmap(path, blocks, total_len)
         return stats
+
+    def _resolve_block(self, digest: bytes, chunk: bytes):
+        """Dup-or-store one block through the claim protocol (used when
+        a concurrent writer's claim we waited on aborted): loops until
+        the digest is either registered by someone (dup) or claimed and
+        stored by us.  Returns (locations, is_new)."""
+        mgr = self.manager
+        while True:
+            locmap, claimed, waits = mgr.claim_blocks([digest])
+            if locmap:
+                return locmap[digest], False
+            if claimed:
+                try:
+                    locs = mgr.place(digest)
+                    for nid in locs:
+                        mgr.nodes[nid].put(digest, chunk)
+                except BaseException:
+                    mgr.finish_claim(digest, None)
+                    raise
+                mgr.finish_claim(digest, locs)
+                return locs, True
+            waits[digest].wait()
 
     def _write_raw(self, path: str, data: bytes) -> WriteStats:
         """ca='none': direct striping, no hashing (synthetic digests)."""
@@ -287,8 +378,10 @@ class SAI:
     def write_async(self, path: str, data: bytes) -> WriteFuture:
         """Pipelined write: chunk+hash of this write overlap the store
         stage of the previous one (and hash requests from back-to-back
-        writes coalesce in the engine).  Commit order matches submission
-        order, so versioning is identical to sequential sync writes."""
+        writes coalesce in the engine).  The store stage is sharded into
+        per-path commit lanes, so writers to different paths commit in
+        parallel; commit order matches submission order per path, so
+        versioning is identical to sequential sync writes."""
         fut = WriteFuture()
         with self._pipe_lock:
             self._ensure_pipeline()
@@ -296,24 +389,33 @@ class SAI:
         return fut
 
     def flush(self):
-        """Block until every pipelined write has committed."""
+        """Block until every pipelined write and read has completed."""
         with self._pipe_lock:
-            chunk_q, store_q = self._chunk_q, self._store_q
+            chunk_q, store_qs = self._chunk_q, self._store_qs
+            fetch_q, verify_q = self._fetch_q, self._verify_q
         if chunk_q is not None:
             chunk_q.join()
-            store_q.join()
+            for q in store_qs:
+                q.join()
+        if fetch_q is not None:
+            fetch_q.join()
+            verify_q.join()
 
     def close(self):
         """Drain and stop the pipeline threads (idempotent).  In-flight
-        writes complete first; a later write_async restarts the
-        pipeline.  SAIs that only use sync ``write`` have no threads."""
+        writes/reads complete first; a later write_async / read_async
+        restarts its pipeline.  SAIs that only use sync ``write`` /
+        ``read`` have no threads."""
         with self._pipe_lock:
-            chunk_q, threads = self._chunk_q, self._pipe_threads
-            self._chunk_q = self._store_q = None
+            chunk_q, fetch_q = self._chunk_q, self._fetch_q
+            threads = self._pipe_threads
+            self._chunk_q = self._store_qs = None
+            self._fetch_q = self._verify_q = None
             self._pipe_threads = []
-        if chunk_q is None:
-            return
-        chunk_q.put(None)            # chunk worker forwards to store
+        if chunk_q is not None:
+            chunk_q.put(None)        # chunk worker forwards to each lane
+        if fetch_q is not None:
+            fetch_q.put(None)        # fetch worker forwards to verify
         for t in threads:
             t.join(timeout=60)
 
@@ -322,24 +424,31 @@ class SAI:
         if self._chunk_q is not None:
             return
         self._chunk_q = queue.Queue()
-        self._store_q = queue.Queue()
-        self._pipe_threads = [
-            threading.Thread(target=target, args=(self._chunk_q,
-                                                  self._store_q),
-                             daemon=True, name=name)
-            for name, target in (("sai-chunk", self._chunk_loop),
-                                 ("sai-store", self._store_loop))]
-        for t in self._pipe_threads:
+        n_lanes = max(1, int(self.cfg.store_lanes))
+        self._store_qs = [queue.Queue() for _ in range(n_lanes)]
+        threads = [threading.Thread(target=self._chunk_loop,
+                                    args=(self._chunk_q, self._store_qs),
+                                    daemon=True, name="sai-chunk")]
+        threads += [
+            threading.Thread(target=self._store_loop, args=(q,),
+                             daemon=True, name=f"sai-store-{i}")
+            for i, q in enumerate(self._store_qs)]
+        self._pipe_threads.extend(threads)
+        for t in threads:
             t.start()
 
-    def _chunk_loop(self, chunk_q, store_q):
+    def _chunk_loop(self, chunk_q, store_qs):
         while True:
             item = chunk_q.get()
             if item is None:                         # close() sentinel
-                store_q.put(None)
+                for q in store_qs:
+                    q.put(None)
                 chunk_q.task_done()
                 return
             fut, path, data = item
+            # per-path lane: commits for one path stay FIFO while
+            # different paths commit on parallel lanes
+            store_q = store_qs[hash(path) % len(store_qs)]
             try:
                 if self.cfg.ca == "none":
                     store_q.put((fut, path, data, None, None, {}))
@@ -356,7 +465,7 @@ class SAI:
             finally:
                 chunk_q.task_done()
 
-    def _store_loop(self, chunk_q, store_q):
+    def _store_loop(self, store_q):
         while True:
             item = store_q.get()
             if item is None:                         # close() sentinel
@@ -386,31 +495,149 @@ class SAI:
     # ------------------------------------------------------------------
     # read path
     # ------------------------------------------------------------------
-    def read(self, path: str, version: int = -1,
-             verify: bool = True) -> bytes:
-        fv = self.manager.get_blockmap(path, version)
-        if fv is None:
-            raise FileNotFoundError(path)
-        out = bytearray()
-        for b in fv.blocks:
-            data = None
-            locs = self.manager.lookup_block(b.digest) or b.nodes
-            last_err: Optional[Exception] = None
+    def _fetch_blocks(self, blocks, locmap=None) -> List[bytes]:
+        """Fetch every block of a file version with replica failover.
+        ``locmap`` carries the replica locations resolved by
+        ``get_read_plan`` under one lock; blocks missing from it fall
+        back to the block-map's recorded nodes."""
+        if locmap is None:
+            locmap = {}
+        def try_locs(digest, locs):
+            err = None
             for nid in locs:
                 try:
-                    data = self.manager.nodes[nid].get(b.digest)
-                    break
+                    return self.manager.nodes[nid].get(digest), None
                 except (NodeFailure, KeyError) as e:
-                    last_err = e
+                    err = e
+            return None, err
+
+        datas: List[bytes] = []
+        for b in blocks:
+            data, last_err = try_locs(b.digest,
+                                      locmap.get(b.digest) or b.nodes)
+            if data is None:
+                # the plan may have gone stale (a node failed and
+                # re-replication moved the block after the snapshot):
+                # retry with a fresh registry lookup before giving up
+                data, err2 = try_locs(b.digest,
+                                      self.manager.lookup_block(b.digest))
+                last_err = err2 or last_err
             if data is None:
                 raise NodeFailure(
                     f"block {b.digest.hex()[:8]} unavailable: {last_err}")
-            if verify and not b.digest.startswith(b"raw!"):
-                if block_digest_cpu(data) != b.digest:
-                    raise IOError(
-                        f"integrity check failed for {b.digest.hex()[:8]}")
-            out += data
-        return bytes(out[:fv.total_len])
+            datas.append(data)
+        return datas
+
+    def _submit_verify(self, blocks, datas: List[bytes]):
+        """Start re-hashing the verifiable fetched blocks as fused
+        direct requests (non-blocking on the tpu path): at most
+        ceil(n / max_batch) engine submissions, so one huge read never
+        stages a single unbounded [n, W] padded matrix.  Synthetic
+        ``raw!`` digests (ca='none') carry no content hash and are
+        skipped."""
+        checkable = [(b, d) for b, d in zip(blocks, datas)
+                     if not b.digest.startswith(b"raw!")]
+        group = self.engine.max_batch if self.cfg.hasher == "tpu" \
+            else max(len(checkable), 1)
+        handles = [self._submit_hash([d for _, d in checkable[i:i + group]])
+                   for i in range(0, len(checkable), group)]
+        return handles, [b for b, _ in checkable]
+
+    @staticmethod
+    def _gather_digests(handles) -> List[bytes]:
+        return [d for h in handles for d in h.wait()]
+
+    @staticmethod
+    def _check_digests(blocks, digests: List[bytes]):
+        for b, digest in zip(blocks, digests):
+            if digest != b.digest:
+                raise IOError(
+                    f"integrity check failed for {b.digest.hex()[:8]}")
+
+    def read(self, path: str, version: int = -1,
+             verify: bool = True) -> bytes:
+        """Verified read: all fetched blocks are re-hashed by ONE fused
+        engine request (per-block ``hashlib`` only on the cpu hasher),
+        digests are compared on the host, and the file is assembled."""
+        fv, locmap = self.manager.get_read_plan(path, version)
+        if fv is None:
+            raise FileNotFoundError(path)
+        datas = self._fetch_blocks(fv.blocks, locmap)
+        if verify:
+            handles, checkable = self._submit_verify(fv.blocks, datas)
+            self._check_digests(checkable, self._gather_digests(handles))
+        return b"".join(datas)[:fv.total_len]
+
+    def read_async(self, path: str, version: int = -1,
+                   verify: bool = True) -> ReadFuture:
+        """Pipelined read: fetch -> verify -> assemble as staged threads.
+        The verify stage of read i (waiting on the engine digest) overlaps
+        the fetch stage of read i+1, and verify requests from concurrent
+        readers coalesce into common batch launches through the shared
+        engine."""
+        fut = ReadFuture()
+        with self._pipe_lock:
+            self._ensure_read_pipeline()
+            self._fetch_q.put((fut, path, version, verify))
+        return fut
+
+    def _ensure_read_pipeline(self):
+        # caller holds _pipe_lock
+        if self._fetch_q is not None:
+            return
+        self._fetch_q = queue.Queue()
+        self._verify_q = queue.Queue()
+        threads = [
+            threading.Thread(target=self._fetch_loop,
+                             args=(self._fetch_q, self._verify_q),
+                             daemon=True, name="sai-fetch"),
+            threading.Thread(target=self._verify_loop,
+                             args=(self._verify_q,),
+                             daemon=True, name="sai-verify")]
+        self._pipe_threads.extend(threads)
+        for t in threads:
+            t.start()
+
+    def _fetch_loop(self, fetch_q, verify_q):
+        while True:
+            item = fetch_q.get()
+            if item is None:                         # close() sentinel
+                verify_q.put(None)
+                fetch_q.task_done()
+                return
+            fut, path, version, verify = item
+            try:
+                fv, locmap = self.manager.get_read_plan(path, version)
+                if fv is None:
+                    raise FileNotFoundError(path)
+                datas = self._fetch_blocks(fv.blocks, locmap)
+                if verify:
+                    handles, checkable = self._submit_verify(fv.blocks,
+                                                             datas)
+                else:
+                    handles, checkable = None, []
+                verify_q.put((fut, fv, datas, handles, checkable))
+            except BaseException as e:
+                fut._fail(e)
+            finally:
+                fetch_q.task_done()
+
+    def _verify_loop(self, verify_q):
+        while True:
+            item = verify_q.get()
+            if item is None:                         # close() sentinel
+                verify_q.task_done()
+                return
+            fut, fv, datas, handles, checkable = item
+            try:
+                if handles is not None:
+                    self._check_digests(checkable,
+                                        self._gather_digests(handles))
+                fut._resolve(b"".join(datas)[:fv.total_len])
+            except BaseException as e:
+                fut._fail(e)
+            finally:
+                verify_q.task_done()
 
 
 def _pad4(data: bytes) -> bytes:
@@ -426,7 +653,7 @@ def block_digest_cpu(data: bytes) -> bytes:
 
 def _cpu_sliding(data: bytes, window: int, stride: int) -> np.ndarray:
     """Single-core CPU sliding-window hashing (the paper's CPU baseline)."""
-    n = (len(data) - window) // stride + 1
+    n = max((len(data) - window) // stride + 1, 0)
     out = np.empty((n,), np.uint32)
     view = memoryview(data)
     for i in range(n):

@@ -133,15 +133,19 @@ def _gear_kernel_hybrid(prev_ref, cur_ref, out_ref):
 
 def gear_pallas(strip: jax.Array, interpret: bool = True,
                 version: int = 1, tile: int = TILE_W) -> jax.Array:
-    """Windowed gear hash of every byte position.
+    """Windowed gear hash of every byte position over B parallel strips.
 
-    strip: [1, tile + W] uint32 packed little-endian bytes, with ``tile``
-    leading pad words (history; zeros at stream start) — W data words.
+    strip: [B, tile + W] uint32 packed little-endian bytes, each row with
+    ``tile`` leading pad words (history; zeros at stream start) — W data
+    words.  Rows are independent streams (the offload engine fuses a
+    burst of gear jobs into one launch by stacking them here); the grid
+    runs (row, tile) so a single launch covers the whole batch.
     ``tile`` is the BlockSpec width: larger tiles = fewer grid steps
     (VMEM cost 3 * tile words; bounded by the wrapper).
-    Returns [4, W] uint32: h for byte position 4q + r at [r, q].
+    Returns [B, 4, W] uint32: h for row b's byte position 4q + r at
+    [b, r, q].
     """
-    _, Wp = strip.shape
+    B, Wp = strip.shape
     W = Wp - tile
     assert W % tile == 0, (W, tile)
     n_tiles = W // tile
@@ -149,13 +153,13 @@ def gear_pallas(strip: jax.Array, interpret: bool = True,
               3: _gear_kernel_hybrid}[version]
     out = pl.pallas_call(
         kernel,
-        grid=(n_tiles,),
+        grid=(B, n_tiles),
         in_specs=[
-            pl.BlockSpec((1, tile), lambda i: (0, i)),
-            pl.BlockSpec((1, tile), lambda i: (0, i + 1)),
+            pl.BlockSpec((1, tile), lambda b, i: (b, i)),
+            pl.BlockSpec((1, tile), lambda b, i: (b, i + 1)),
         ],
-        out_specs=pl.BlockSpec((1, 4, tile), lambda i: (0, 0, i)),
-        out_shape=jax.ShapeDtypeStruct((1, 4, W), jnp.uint32),
+        out_specs=pl.BlockSpec((1, 4, tile), lambda b, i: (b, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((B, 4, W), jnp.uint32),
         interpret=interpret,
     )(strip, strip)
-    return out[0]
+    return out

@@ -15,6 +15,15 @@ Two layers are exposed:
     by the CrystalTPU offload engine, which manages its own staging
     buffers and ``device_put`` so data stays on the accelerator from
     transfer through kernel with no host round-trip.
+
+Stream batching: ``sliding_hash_batch_device`` / ``gear_hash_batch_device``
+take a padded [B, L] word matrix (B independent buffers) and execute the
+whole batch as ONE kernel launch — the engine fuses bursts of same-config
+stream jobs through these, then slices each job's rows out of the fused
+phase-matrix output host-side (``sliding_finish`` / ``gear_finish`` per
+row).  Rows are zero-padded to the widest buffer in the batch; window
+hashes only ever read bytes inside their own job's valid prefix, so
+padding never changes a returned hash.
 """
 from __future__ import annotations
 
@@ -114,20 +123,6 @@ def hash_blocks(data: bytes, block_bytes: int,
 # --------------------------------------------------------------------------
 # sliding-window MD5 (paper-faithful CDC)
 # --------------------------------------------------------------------------
-def _byte_phase_strips(words: jax.Array, phases: Tuple[int, ...],
-                       pad_words: int) -> jax.Array:
-    """Rotated word streams: strip r's word k covers bytes 4k+r..4k+r+3."""
-    nxt = jnp.concatenate([words[1:], jnp.zeros((1,), jnp.uint32)])
-    strips = []
-    for r in phases:
-        if r == 0:
-            s = words
-        else:
-            s = (words >> jnp.uint32(8 * r)) | (nxt << jnp.uint32(32 - 8 * r))
-        strips.append(jnp.pad(s, (0, pad_words)))
-    return jnp.stack(strips)
-
-
 def _pick_tile(L: int, base: int) -> int:
     """Tile width bounding grid steps to ~64 (VMEM stays < ~0.5 MB/input
     block; interpret mode traces the grid as a Python loop, so step count
@@ -138,40 +133,74 @@ def _pick_tile(L: int, base: int) -> int:
     return t
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("w_words", "phases", "interpret"))
-def _sliding_hash_words(words: jax.Array, w_words: int,
-                        phases: Tuple[int, ...],
-                        interpret: bool = True) -> jax.Array:
-    L = words.shape[0]
-    T = _pick_tile(L, slide_k.TILE_W)
-    w_cap = ((L + T - 1) // T) * T
-    pad = w_cap - L + T
-    strips = _byte_phase_strips(words, phases, pad)          # [R, w_cap+T]
-    out = slide_k.sliding_md5_pallas(strips, w_words,
-                                     interpret=interpret,
-                                     tile=T)                 # [R, 4, w_cap]
-    return out[:, 0, :]                                      # digest word a
-
-
 def sliding_hash_device(words: jax.Array, w_words: int,
                         phases: Tuple[int, ...],
                         interpret: bool = True) -> jax.Array:
     """Device-resident sliding-window hashing: ``words`` [L] uint32 on
     the target device.  Returns the [R, Wc] uint32 per-phase hash matrix
-    on device; ``sliding_finish`` interleaves it host-side."""
-    return _sliding_hash_words(words, w_words, phases,
-                               interpret=interpret)
+    on device; ``sliding_finish`` interleaves it host-side.  (The B=1
+    case of the batched path — one strip builder and one jit cache.)"""
+    return _sliding_hash_words_batch(words[None], w_words, phases,
+                                     interpret=interpret)[0]
 
 
 def sliding_finish(out: np.ndarray, phases: Tuple[int, ...],
                    n_off: int) -> np.ndarray:
     """Interleave phase rows: offset o = 4q + phases[r] -> out[r, q]."""
+    if n_off <= 0:                 # input shorter than one window
+        return np.empty((0,), np.uint32)
     R, Wc = out.shape
     inter = np.empty((Wc * R,), np.uint32)
     for i, r in enumerate(phases):
         inter[i::R] = out[i]
     return inter[:n_off]
+
+
+def _byte_phase_strips_batch(words: jax.Array, phases: Tuple[int, ...],
+                             pad_words: int) -> jax.Array:
+    """Batched strip construction: rows are independent buffers, so the
+    cross-word carry shifts stay within each row."""
+    B = words.shape[0]
+    nxt = jnp.concatenate([words[:, 1:], jnp.zeros((B, 1), jnp.uint32)],
+                          axis=1)
+    strips = []
+    for r in phases:
+        if r == 0:
+            s = words
+        else:
+            s = (words >> jnp.uint32(8 * r)) | (nxt << jnp.uint32(32 - 8 * r))
+        strips.append(jnp.pad(s, ((0, 0), (0, pad_words))))
+    return jnp.stack(strips, axis=1)                     # [B, R, L+pad]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("w_words", "phases", "interpret"))
+def _sliding_hash_words_batch(words: jax.Array, w_words: int,
+                              phases: Tuple[int, ...],
+                              interpret: bool = True) -> jax.Array:
+    B, L = words.shape
+    T = _pick_tile(L, slide_k.TILE_W)
+    w_cap = ((L + T - 1) // T) * T
+    pad = w_cap - L + T
+    strips = _byte_phase_strips_batch(words, phases, pad)  # [B,R,w_cap+T]
+    R = len(phases)
+    out = slide_k.sliding_md5_pallas(
+        strips.reshape(B * R, w_cap + T), w_words,
+        interpret=interpret, tile=T)                       # [B*R, 4, w_cap]
+    return out[:, 0, :].reshape(B, R, w_cap)
+
+
+def sliding_hash_batch_device(words: jax.Array, w_words: int,
+                              phases: Tuple[int, ...],
+                              interpret: bool = True) -> jax.Array:
+    """Fused multi-buffer sliding-window hashing: ``words`` [B, L] uint32
+    on the target device, one row per job (rows zero-padded to the batch
+    width).  ONE kernel launch covers all B*R strips; returns the
+    [B, R, Wc] uint32 per-job/per-phase hash matrix on device — callers
+    slice row b and run ``sliding_finish`` with that job's own offset
+    count."""
+    return _sliding_hash_words_batch(words, w_words, phases,
+                                     interpret=interpret)
 
 
 def sliding_window_hash(data: bytes | np.ndarray, window: int = 48,
@@ -185,6 +214,8 @@ def sliding_window_hash(data: bytes | np.ndarray, window: int = 48,
                                                              bytearray)) \
         else np.asarray(data, np.uint8)
     L = len(buf)
+    if L < window:                 # no complete window: empty hash array
+        return np.empty((0,), np.uint32)
     n_off = (L - window) // stride + 1
     pad = (-L) % 4
     words = jnp.asarray(np.pad(buf, (0, pad)).view("<u4"))
@@ -197,24 +228,36 @@ def sliding_window_hash(data: bytes | np.ndarray, window: int = 48,
 # --------------------------------------------------------------------------
 # gear rolling hash (beyond-paper CDC)
 # --------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("interpret", "version"))
-def _gear_hash_words(words: jax.Array, interpret: bool = True,
-                     version: int = 1) -> jax.Array:
-    L = words.shape[0]
-    T = _pick_tile(L, gear_k.TILE_W)
-    w_cap = ((L + T - 1) // T) * T
-    strip = jnp.pad(words, (T, w_cap - L))[None, :]          # lead history 0s
-    out = gear_k.gear_pallas(strip, interpret=interpret,
-                             version=version, tile=T)        # [4, w_cap]
-    return out
-
-
 def gear_hash_device(words: jax.Array, interpret: bool = True,
                      version: int = 1) -> jax.Array:
     """Device-resident gear hashing: ``words`` [L] uint32 on the target
     device.  Returns the [4, w_cap] uint32 phase matrix on device;
-    ``gear_finish`` flattens it host-side."""
-    return _gear_hash_words(words, interpret=interpret, version=version)
+    ``gear_finish`` flattens it host-side.  (The B=1 case of the
+    batched path — one pad/launch wrapper and one jit cache.)"""
+    return _gear_hash_words_batch(words[None], interpret=interpret,
+                                  version=version)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "version"))
+def _gear_hash_words_batch(words: jax.Array, interpret: bool = True,
+                           version: int = 1) -> jax.Array:
+    B, L = words.shape
+    T = _pick_tile(L, gear_k.TILE_W)
+    w_cap = ((L + T - 1) // T) * T
+    strip = jnp.pad(words, ((0, 0), (T, w_cap - L)))   # per-row history 0s
+    return gear_k.gear_pallas(strip, interpret=interpret,
+                              version=version, tile=T)       # [B, 4, w_cap]
+
+
+def gear_hash_batch_device(words: jax.Array, interpret: bool = True,
+                           version: int = 1) -> jax.Array:
+    """Fused multi-buffer gear hashing: ``words`` [B, L] uint32 on the
+    target device, one row per job (rows zero-padded to the batch width).
+    ONE kernel launch covers the whole batch; returns the [B, 4, Wc]
+    uint32 phase matrices on device — callers slice row b and flatten it
+    with ``gear_finish`` using that job's own byte length."""
+    return _gear_hash_words_batch(words, interpret=interpret,
+                                  version=version)
 
 
 def gear_finish(out: np.ndarray, n_bytes: int) -> np.ndarray:

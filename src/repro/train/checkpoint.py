@@ -113,15 +113,22 @@ class CACheckpointer:
 
     # ------------------------------------------------------------------
     def restore(self, version: int = -1):
-        """Returns (step, state dict) for the requested manifest version."""
+        """Returns (step, state dict) for the requested manifest version.
+
+        Every leaf is read through the SAI's pipelined ``read_async``:
+        all reads are submitted up front, so the verify stage of leaf i
+        (one fused engine hash request per leaf) overlaps the fetch of
+        leaf i+1 and the per-leaf verify requests coalesce into batched
+        kernel launches — the read-side mirror of ``save``'s burst."""
         raw = self.sai.read(f"{self.prefix}/MANIFEST", version=version)
         manifest = json.loads(raw.decode())
+        futs = [(leaf, self.sai.read_async(f"{self.prefix}/{leaf['key']}",
+                                           version=leaf["version"]))
+                for leaf in manifest["leaves"]]
         flat: Dict[str, np.ndarray] = {}
-        for leaf in manifest["leaves"]:
-            data = self.sai.read(f"{self.prefix}/{leaf['key']}",
-                                 version=leaf["version"])
-            arr = np.frombuffer(data, dtype=leaf["dtype"]).reshape(
-                leaf["shape"])
+        for leaf, fut in futs:
+            arr = np.frombuffer(fut.result(),
+                                dtype=leaf["dtype"]).reshape(leaf["shape"])
             flat[leaf["key"]] = arr
         return manifest["step"], _unflatten(flat), manifest["extra"]
 

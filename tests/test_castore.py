@@ -112,3 +112,29 @@ def test_tpu_and_cpu_hashers_agree(rng):
     sai_t.write("/f", data)
     sai_c.write("/f", data)
     assert set(mgr_t.block_registry) == set(mgr_c.block_registry)
+
+
+def test_get_read_plan_consistent_with_lookups(rng):
+    """get_read_plan returns the same block-map and locations as the
+    per-block lookup path, in one lock acquisition."""
+    sai, mgr, _ = _sai()
+    data = rng.integers(0, 256, 30_000, dtype=np.uint8).tobytes()
+    sai.write("/f", data)
+    fv, locmap = mgr.get_read_plan("/f")
+    assert fv is mgr.get_blockmap("/f")
+    for b in fv.blocks:
+        assert locmap[b.digest] == mgr.lookup_block(b.digest)
+    none_fv, none_map = mgr.get_read_plan("/missing")
+    assert none_fv is None and none_map == {}
+
+
+def test_read_survives_stale_plan_after_failover(rng):
+    """A block re-replicated after the read plan snapshot is still
+    fetched via the fresh-lookup fallback."""
+    sai, mgr, nodes = _sai(replication=2)
+    data = rng.integers(0, 256, 30_000, dtype=np.uint8).tobytes()
+    sai.write("/f", data)
+    fv, locmap = mgr.get_read_plan("/f")
+    mgr.handle_node_failure(0)           # moves blocks, registry changes
+    assert sai._fetch_blocks(fv.blocks, locmap)  # stale map still works
+    assert sai.read("/f") == data

@@ -59,6 +59,153 @@ def test_coalescing_off_launches_per_request(rng):
         eng.shutdown()
 
 
+@pytest.mark.parametrize("kind,meta", [("sliding", {"window": 48,
+                                                    "stride": 4}),
+                                       ("gear", {})])
+def test_stream_burst_coalesces(rng, kind, meta):
+    """A burst of >= 4 same-config sliding/gear jobs fuses into one
+    padded multi-row launch; every result matches the single-job ops
+    oracle (acceptance criterion)."""
+    from repro.kernels import ops
+    eng = CrystalTPU(coalesce_window_s=0.2, max_batch=64)
+    try:
+        bufs = [rng.integers(0, 256, 2048 + 512 * i, dtype=np.uint8)
+                for i in range(6)]
+        jobs = [eng.submit(kind, b, dict(meta)) for b in bufs]
+        for j, b in zip(jobs, bufs):
+            if kind == "sliding":
+                want = ops.sliding_window_hash(b.tobytes(), 48, 4)
+            else:
+                want = ops.gear_hash(b.tobytes())
+            np.testing.assert_array_equal(j.wait(), want)
+        stats = eng.snapshot_stats()
+        assert stats["jobs"] == len(bufs)
+        assert stats["launches"] < stats["jobs"], stats
+        assert stats["coalesced"] == stats["jobs"] - stats["launches"]
+    finally:
+        eng.shutdown()
+
+
+def test_mixed_config_sliding_jobs_never_fuse(rng):
+    """Sliding jobs with different window/stride have different fuse
+    keys: all results stay correct (via the carry path)."""
+    from repro.kernels import ops
+    eng = CrystalTPU(coalesce_window_s=0.05)
+    try:
+        buf = rng.integers(0, 256, 4096, dtype=np.uint8)
+        configs = [(48, 4), (32, 4), (48, 2), (48, 4)]
+        jobs = [eng.submit("sliding", buf, {"window": w, "stride": s})
+                for w, s in configs]
+        for j, (w, s) in zip(jobs, configs):
+            np.testing.assert_array_equal(
+                j.wait(), ops.sliding_window_hash(buf.tobytes(), w, s))
+    finally:
+        eng.shutdown()
+
+
+def test_short_stream_job_returns_empty(rng):
+    """len(data) < window yields an empty hash array, not a crash."""
+    eng = CrystalTPU()
+    try:
+        job = eng.submit("sliding", np.frombuffer(b"tiny", np.uint8),
+                         {"window": 48, "stride": 4})
+        assert job.wait().shape == (0,)
+        gj = eng.submit("gear", np.frombuffer(b"xy", np.uint8), {})
+        assert gj.wait().shape == (2,)
+    finally:
+        eng.shutdown()
+
+
+def test_concurrent_identical_content_never_double_stores(rng):
+    """Store lanes racing on the same novel digests: the claim protocol
+    guarantees exactly one lane stores each block — placement, stored
+    bytes, and new/dup accounting stay exact."""
+    sai, mgr = _sai(hasher="cpu", store_lanes=4)
+    data = rng.integers(0, 256, 40_000, dtype=np.uint8).tobytes()
+    futs = [sai.write_async(f"/dup/p{i}", data) for i in range(8)]
+    stats = [f.result(timeout=120) for f in futs]
+    n_unique = len(mgr.block_registry)
+    assert sum(s.new_blocks for s in stats) == n_unique
+    total = sum(s.new_blocks + s.dup_blocks for s in stats)
+    assert sum(s.dup_blocks for s in stats) == total - n_unique
+    for locs in mgr.block_registry.values():
+        assert len(locs) == 1              # replication=1: stored once
+    assert mgr.stats()["stored_bytes"] == len(data)
+    for i in range(8):
+        assert sai.read(f"/dup/p{i}") == data
+    sai.close()
+
+
+def test_same_shape_jobs_across_managers_complete(rng):
+    """Jobs must compare by identity, not array equality: two managers
+    concurrently running same-shape jobs used to crash the manager
+    thread on running-list membership (dataclass eq over numpy fields)
+    and hang every waiter."""
+    import jax
+    eng = CrystalTPU(devices=list(jax.devices()) * 2)
+    try:
+        data = rng.integers(0, 256, 8192, dtype=np.uint8)
+        from repro.kernels import ops
+        want = ops.direct_hash(data.reshape(2, 4096))
+        jobs = [eng.submit("direct", data, {"seg_bytes": 4096})
+                for _ in range(4)]
+        for j in jobs:
+            np.testing.assert_array_equal(j.wait(), want)
+    finally:
+        eng.shutdown()
+
+
+def test_max_fused_bytes_caps_stream_batches(rng):
+    """The staging-byte budget bounds stream fusion: 6 8KB jobs under a
+    16KB budget need >= 3 launches, results intact."""
+    from repro.kernels import ops
+    eng = CrystalTPU(coalesce_window_s=0.2, max_fused_bytes=16 << 10)
+    try:
+        bufs = [rng.integers(0, 256, 8192, dtype=np.uint8)
+                for _ in range(6)]
+        jobs = [eng.submit("sliding", b, {"window": 48, "stride": 4})
+                for b in bufs]
+        for j, b in zip(jobs, bufs):
+            np.testing.assert_array_equal(
+                j.wait(), ops.sliding_window_hash(b.tobytes(), 48, 4))
+        assert eng.snapshot_stats()["launches"] >= 3
+    finally:
+        eng.shutdown()
+
+
+def test_max_fused_rows_caps_direct_batches(rng):
+    """The fused-row cap bounds the padded staging matrix: 6 two-row
+    jobs under a 4-row cap need at least 3 launches, results intact."""
+    from repro.kernels import ops
+    eng = CrystalTPU(coalesce_window_s=0.2, max_fused_rows=4)
+    try:
+        data = rng.integers(0, 256, 8192, dtype=np.uint8)
+        jobs = [eng.submit("direct", data, {"seg_bytes": 4096})
+                for _ in range(6)]
+        want = ops.direct_hash(data.reshape(2, 4096))
+        for j in jobs:
+            np.testing.assert_array_equal(j.wait(), want)
+        assert eng.snapshot_stats()["launches"] >= 3
+    finally:
+        eng.shutdown()
+
+
+def test_store_lanes_commit_all_paths(rng):
+    """Sharded store lanes: concurrent writers to many paths all commit,
+    and per-path version order still matches submission order."""
+    sai, mgr = _sai(hasher="cpu", store_lanes=3)
+    payloads = [bytes([i]) * 4000 for i in range(9)]
+    futs = [sai.write_async(f"/lane{i % 3}", p)
+            for i, p in enumerate(payloads)]
+    for f in futs:
+        f.result(timeout=120)
+    for p in range(3):
+        assert mgr.num_versions(f"/lane{p}") == 3
+        for v in range(3):
+            assert sai.read(f"/lane{p}", version=v) == payloads[3 * v + p]
+    sai.close()
+
+
 def test_mixed_kind_burst_preserves_all_results(rng):
     """Direct jobs coalesce around interleaved sliding/gear jobs (the
     carry path) without losing or corrupting any result."""

@@ -1,0 +1,183 @@
+"""The read/verify pipeline (ISSUE 2).
+
+Covers the acceptance criteria: tpu-verified reads are bit-identical to
+cpu-verified reads across ca modes, replica failover still verifies,
+corrupted blocks raise IOError on both sync and pipelined reads, a burst
+of reads coalesces verify requests into fewer fused launches, a verified
+read of an n-block file issues at most ceil(n / max_batch) engine
+launches with zero per-block host hashlib calls on the tpu path, and
+short CDC inputs (len < window) fall back to one whole-buffer chunk.
+"""
+import numpy as np
+import pytest
+
+from repro.core import CrystalTPU, SAI, SAIConfig, make_store
+
+
+def _cfg(ca="fixed", hasher="tpu", **kw):
+    return SAIConfig(ca=ca, hasher=hasher, block_size=4096, avg_chunk=4096,
+                     min_chunk=1024, max_chunk=16384, **kw)
+
+
+@pytest.mark.parametrize("ca", ["fixed", "cdc", "cdc-gear", "none"])
+def test_tpu_read_bit_identical_to_cpu_read(rng, ca):
+    """One store, two readers: engine-verified and hashlib-verified reads
+    return identical bytes for every ca mode."""
+    mgr, _ = make_store(4)
+    data = rng.integers(0, 256, 20_000, dtype=np.uint8).tobytes()
+    SAI(mgr, _cfg(ca=ca, hasher="cpu")).write("/f", data)
+    eng = CrystalTPU()
+    try:
+        got_tpu = SAI(mgr, _cfg(ca=ca, hasher="tpu"),
+                      crystal=eng).read("/f")
+        got_cpu = SAI(mgr, _cfg(ca=ca, hasher="cpu")).read("/f")
+        assert got_tpu == got_cpu == data
+    finally:
+        eng.shutdown()
+
+
+def test_replica_failover_still_verifies(rng):
+    mgr, nodes = make_store(4, replication=2)
+    eng = CrystalTPU()
+    sai = SAI(mgr, _cfg(), crystal=eng)
+    try:
+        data = rng.integers(0, 256, 30_000, dtype=np.uint8).tobytes()
+        sai.write("/f", data)
+        nodes[0].fail()
+        assert sai.read("/f") == data
+        assert sai.read_async("/f").result(timeout=120) == data
+    finally:
+        sai.close()
+        eng.shutdown()
+
+
+def test_corrupted_block_raises_ioerror(rng):
+    mgr, nodes = make_store(4)
+    eng = CrystalTPU()
+    sai = SAI(mgr, _cfg(), crystal=eng)
+    try:
+        data = rng.integers(0, 256, 30_000, dtype=np.uint8).tobytes()
+        sai.write("/f", data)
+        digest = next(iter(mgr.block_registry))
+        for n in nodes:
+            if digest in n.blocks:
+                n.blocks[digest] = bytes(len(n.blocks[digest]))
+        with pytest.raises(IOError):
+            sai.read("/f")
+        with pytest.raises(IOError):
+            sai.read_async("/f").result(timeout=120)
+        # unverified read still assembles the (corrupt) bytes
+        assert len(sai.read("/f", verify=False)) == len(data)
+    finally:
+        sai.close()
+        eng.shutdown()
+
+
+def test_read_burst_coalesces_verify_requests(rng):
+    """A burst of >= 4 pipelined reads fuses their verify hash requests:
+    launches stay below submitted jobs (acceptance criterion)."""
+    mgr, _ = make_store(4)
+    eng = CrystalTPU(coalesce_window_s=0.2)
+    sai = SAI(mgr, _cfg(), crystal=eng)
+    try:
+        datas = [rng.integers(0, 256, 20_000, dtype=np.uint8).tobytes()
+                 for _ in range(6)]
+        for i, d in enumerate(datas):
+            sai.write(f"/f{i}", d)
+        sai.read("/f0")                       # warm the verify shapes
+        s0 = eng.snapshot_stats()
+        futs = [sai.read_async(f"/f{i}") for i in range(6)]
+        got = [f.result(timeout=120) for f in futs]
+        assert got == datas
+        s1 = eng.snapshot_stats()
+        jobs = s1["jobs"] - s0["jobs"]
+        launches = s1["launches"] - s0["launches"]
+        assert jobs >= 6
+        assert launches < jobs, (launches, jobs)
+    finally:
+        sai.close()
+        eng.shutdown()
+
+
+def test_read_single_fused_launch_no_host_hashlib(rng, monkeypatch):
+    """A verified read of an n-block file is ONE fused engine request —
+    at most ceil(n / max_batch) launches and zero per-block host hashlib
+    calls on the tpu path."""
+    mgr, _ = make_store(4)
+    eng = CrystalTPU()
+    sai = SAI(mgr, _cfg(), crystal=eng)
+    try:
+        data = rng.integers(0, 256, 16 * 4096, dtype=np.uint8).tobytes()
+        sai.write("/f", data)                 # 16 blocks
+        sai.read("/f")                        # warm shapes
+        import repro.core.sai as sai_mod
+
+        def _boom(_):
+            raise AssertionError("host hashlib call on the tpu read path")
+
+        monkeypatch.setattr(sai_mod, "block_digest_cpu", _boom)
+        s0 = eng.snapshot_stats()
+        assert sai.read("/f") == data
+        s1 = eng.snapshot_stats()
+        n_blocks = 16
+        max_launches = -(-n_blocks // eng.max_batch)    # ceil
+        assert s1["launches"] - s0["launches"] <= max_launches
+        assert s1["jobs"] - s0["jobs"] == 1
+    finally:
+        sai.close()
+        eng.shutdown()
+
+
+@pytest.mark.parametrize("hasher", ["cpu", "tpu"])
+def test_short_cdc_input_single_chunk(hasher):
+    """len(data) < window: the sliding pass returns an empty hash array
+    and boundary selection falls back to one whole-buffer chunk."""
+    mgr, _ = make_store(4)
+    eng = CrystalTPU() if hasher == "tpu" else None
+    sai = SAI(mgr, _cfg(ca="cdc", hasher=hasher), crystal=eng)
+    try:
+        data = b"short-input!"                # 12 bytes < window 48
+        st = sai.write("/tiny", data)
+        assert st.new_blocks == 1
+        assert sai.read("/tiny") == data
+    finally:
+        sai.close()
+        if eng is not None:
+            eng.shutdown()
+
+
+def test_read_async_missing_file_fails():
+    mgr, _ = make_store(4)
+    sai = SAI(mgr, _cfg(hasher="cpu"))
+    try:
+        with pytest.raises(FileNotFoundError):
+            sai.read_async("/nope").result(timeout=120)
+    finally:
+        sai.close()
+
+
+def test_checkpoint_restore_pipelined(rng):
+    """Restore reads every leaf through read_async; verify requests from
+    successive leaves coalesce and the state round-trips exactly."""
+    from repro.train.checkpoint import CACheckpointer
+    mgr, _ = make_store(4)
+    eng = CrystalTPU(coalesce_window_s=0.05)
+    sai = SAI(mgr, _cfg(), crystal=eng)
+    try:
+        params = {f"layer{i}": rng.standard_normal(2000).astype(np.float32)
+                  for i in range(6)}
+        ckpt = CACheckpointer(sai)
+        ckpt.save(3, params)
+        s0 = eng.snapshot_stats()
+        step, state, _ = ckpt.restore()
+        s1 = eng.snapshot_stats()
+        assert step == 3
+        for k, v in params.items():
+            np.testing.assert_array_equal(state["params"][k], v)
+        delta_jobs = s1["jobs"] - s0["jobs"]
+        delta_launches = s1["launches"] - s0["launches"]
+        assert delta_jobs >= len(params)
+        assert delta_launches < delta_jobs, (delta_launches, delta_jobs)
+    finally:
+        sai.close()
+        eng.shutdown()
