@@ -22,5 +22,5 @@ bench:
 # (redirect, don't pipe: a module failure must fail the make target)
 bench-smoke:
 	BENCH_SMOKE=1 PYTHONPATH=src:. $(PYTHON) benchmarks/run.py \
-		fig4 fig11 read > bench-smoke.csv
+		fig4 fig11 read scrub > bench-smoke.csv
 	@cat bench-smoke.csv

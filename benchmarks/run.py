@@ -20,6 +20,7 @@ MODULES = [
     "benchmarks.fig7_10_workloads",
     "benchmarks.fig11_checkpoint",
     "benchmarks.read_path",
+    "benchmarks.scrub_interference",
     "benchmarks.fig12_17_competing",
     "benchmarks.sec4_2_cpu_vs_accel",
     "benchmarks.kernel_roofline",

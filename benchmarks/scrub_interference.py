@@ -1,0 +1,101 @@
+"""Scrub-vs-foreground interference (the paper's Figures 12-17 question
+asked of the node runtime itself): how much does continuous background
+integrity scrubbing slow the foreground write path when both share one
+offload engine?
+
+Two runs over the same store shape: a pipelined ``write_async`` burst
+with no runtime (baseline), then the same burst while a
+:class:`ClusterRuntime` continuously scrubs a pre-populated resident
+data set.  Scrub hashing rides the engine's low-priority ``scrub`` lane
+and paces its bursts, so the foreground latency ratio should stay small
+(the acceptance bar is < 2x).  The ``scrub_*`` rows expose the engine's
+scrub-lane coalescing counters — ``scrub_launches < scrub_jobs`` is the
+fused-background-burst signature — and the runtime's sweep counters.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import mbps, scaled
+from repro.core import (ClusterRuntime, CrystalTPU, NodeRuntimeConfig,
+                        SAI, SAIConfig, make_store)
+
+N_FILES = scaled(6, 3)            # foreground write burst
+FILE_KB = scaled(1024, 32)
+BLOCK_KB = scaled(128, 8)
+RESIDENT_FILES = scaled(8, 4)     # pre-populated blocks the scrubber sweeps
+RESIDENT_KB = scaled(512, 32)
+
+
+def _timed_burst(sai: SAI, datas, tag: str) -> float:
+    t0 = time.perf_counter()
+    futs = [sai.write_async(f"/{tag}/{i}", d)
+            for i, d in enumerate(datas)]
+    for f in futs:
+        f.result()
+    return time.perf_counter() - t0
+
+
+def run() -> list:
+    rows: list = []
+    rng = np.random.default_rng(11)
+    resident = [rng.integers(0, 256, RESIDENT_KB << 10,
+                             dtype=np.uint8).tobytes()
+                for _ in range(RESIDENT_FILES)]
+    warmup = [rng.integers(0, 256, FILE_KB << 10, dtype=np.uint8).tobytes()
+              for _ in range(N_FILES)]
+    burst = [rng.integers(0, 256, FILE_KB << 10, dtype=np.uint8).tobytes()
+             for _ in range(N_FILES)]
+    total = sum(len(d) for d in burst)
+    times = {}
+
+    for mode in ("baseline", "with_scrub"):
+        mgr, _ = make_store(4, replication=2)
+        engine = CrystalTPU(coalesce_window_s=0.02)
+        sai = SAI(mgr, SAIConfig(ca="fixed", hasher="tpu",
+                                 block_size=BLOCK_KB << 10),
+                  crystal=engine)
+        for i, d in enumerate(resident):
+            sai.write(f"/resident/{i}", d)
+        runtime = None
+        if mode == "with_scrub":
+            # rate-limited scrubbing (the point of the run): small
+            # bursts with pacing, so an in-flight scrub launch never
+            # holds the single engine device long enough to stall a
+            # queued foreground job past the 2x acceptance bar
+            runtime = ClusterRuntime(
+                mgr, engine=engine,
+                config=NodeRuntimeConfig(scrub_batch_blocks=4,
+                                         scrub_interval_s=0.05,
+                                         scrub_cycle_idle_s=0.25))
+            runtime.start()
+            time.sleep(0.2)                   # scrubbing underway
+        # untimed warmup burst: compiles the fused batch shapes —
+        # including the mixed scrub+foreground batches that only exist
+        # while the runtime scrubs — so the timed region measures
+        # steady-state interference, not one-time jit retraces
+        _timed_burst(sai, warmup, tag="warmup")
+        t = _timed_burst(sai, burst, tag="burst")
+        times[mode] = t
+        derived = f"{mbps(total, t):.1f}MBps"
+        if runtime is not None:
+            runtime.stop()
+            s = runtime.snapshot_stats()
+            ratio = t / max(times["baseline"], 1e-9)
+            derived += f"_slowdown={ratio:.2f}x"
+            rows.append((f"scrub/engine/scrub_jobs/{RESIDENT_FILES}res",
+                         float(s["scrub_jobs"]),
+                         f"scrub_launches={s['scrub_launches']}_"
+                         f"scrub_coalesced={s['scrub_coalesced']}"))
+            rows.append(("scrub/runtime/scrubbed_blocks",
+                         float(s["scrubbed_blocks"]),
+                         f"corrupt_found={s['corrupt_found']}_"
+                         f"repaired={s['repaired_copies']}"))
+        rows.append((f"scrub/foreground_write_{mode}/"
+                     f"{N_FILES}x{FILE_KB}KB",
+                     t / N_FILES * 1e6, derived))
+        sai.close()
+        engine.shutdown()
+    return rows

@@ -6,5 +6,7 @@ from repro.core.castore import (MetadataManager, StorageNode, BlockMeta,  # noqa
                                 NodeFailure, make_store)
 from repro.core.crystal import CrystalTPU, Job, default_engine  # noqa: F401
 from repro.core.sai import (SAI, SAIConfig, ReadFuture, WriteFuture,  # noqa: F401
-                            WriteStats)
+                            WriteStats, pack_blocks)
+from repro.core.noderuntime import (ClusterRuntime, NodeRuntime,  # noqa: F401
+                                    NodeRuntimeConfig)
 from repro.core import chunking, integrity  # noqa: F401

@@ -12,7 +12,9 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.integrity import merkle_root
 
 
 class NodeFailure(RuntimeError):
@@ -20,11 +22,19 @@ class NodeFailure(RuntimeError):
 
 
 class StorageNode:
-    """One storage node: content-hash -> block bytes."""
+    """One storage node: content-hash -> block bytes.
+
+    A digest can be *tainted* (quarantined in place): the scrubber or a
+    read-path verify failure found the resident copy corrupt.  Tainted
+    copies are excluded from ``has`` / ``healthy_digests`` — placement
+    and scrubbing treat them as gone — but ``get`` still serves them so
+    unverified last-resort reads keep working until repair lands a fresh
+    copy (``put`` on the digest clears the taint)."""
 
     def __init__(self, node_id: int):
         self.node_id = node_id
         self.blocks: Dict[bytes, bytes] = {}
+        self.tainted: Set[bytes] = set()
         self.failed = False
         self._lock = threading.Lock()
         self.put_count = 0
@@ -35,6 +45,7 @@ class StorageNode:
             raise NodeFailure(f"node {self.node_id} down")
         with self._lock:
             self.blocks[digest] = data
+            self.tainted.discard(digest)
             self.put_count += 1
 
     def get(self, digest: bytes) -> bytes:
@@ -47,7 +58,29 @@ class StorageNode:
             return self.blocks[digest]
 
     def has(self, digest: bytes) -> bool:
-        return not self.failed and digest in self.blocks
+        return (not self.failed and digest in self.blocks
+                and digest not in self.tainted)
+
+    def taint(self, digest: bytes) -> bool:
+        """Quarantine the resident copy in place (corrupt bytes kept for
+        last-resort unverified reads).  Returns True if the digest was
+        resident."""
+        with self._lock:
+            if digest not in self.blocks:
+                return False
+            self.tainted.add(digest)
+            return True
+
+    def drop(self, digest: bytes) -> bool:
+        """Reclaim a block (GC).  Returns True if bytes were freed."""
+        with self._lock:
+            self.tainted.discard(digest)
+            return self.blocks.pop(digest, None) is not None
+
+    def healthy_digests(self) -> List[bytes]:
+        """Snapshot of resident, non-tainted digests (the scrub set)."""
+        with self._lock:
+            return [d for d in self.blocks if d not in self.tainted]
 
     def used_bytes(self) -> int:
         return sum(len(v) for v in self.blocks.values())
@@ -58,6 +91,7 @@ class StorageNode:
     def recover_empty(self):
         self.failed = False
         self.blocks.clear()
+        self.tainted.clear()
 
 
 @dataclass
@@ -72,17 +106,48 @@ class FileVersion:
     blocks: List[BlockMeta]
     total_len: int
     timestamp: float = field(default_factory=time.time)
+    # file-level Merkle root over the block digests (leaf order = block
+    # order): commits the whole version, lets the scrubber spot-check a
+    # single sampled block via integrity.merkle_proof without refetching
+    # the file
+    merkle_root: bytes = b""
 
 
 class MetadataManager:
-    """Centralized manager: file -> versioned block-maps + block registry."""
+    """Centralized manager: file -> versioned block-maps + block registry.
+
+    Beyond placement and block-maps, the manager carries the state the
+    storage-node runtime (repro.core.noderuntime) drives:
+
+    * **reference counts** (``block_refs``): one count per committed
+      block-map occurrence, incremented by ``commit_blockmap`` and
+      decremented by ``retire_versions`` / ``delete_file``.  A digest
+      whose count reaches zero is an orphan the GC may reclaim.
+    * **pins** (``pin_blocks`` / ``unpin_blocks``): transient in-flight
+      write protection — a writer pins its digests before the dedup
+      claim and releases them after its block-map commit, so GC never
+      reclaims a block between a dedup hit (or fresh store) and the
+      commit that references it.
+    * **quarantine** (``quarantine_block``): records a corrupt replica
+      (digest, node), removes the node from the digest's registry
+      locations so reads and placement avoid it, and notifies listeners
+      (the runtime's repair pipeline) of the replica-count deficit.
+    * **retire events** (``add_retire_listener``): version retirement
+      reports newly-orphaned digests so the runtime GC can reclaim
+      eagerly instead of rescanning the registry.
+    """
 
     def __init__(self, nodes: Sequence[StorageNode], replication: int = 1):
         self.nodes = list(nodes)
         self.replication = max(1, replication)
         self.files: Dict[str, List[FileVersion]] = {}
         self.block_registry: Dict[bytes, Tuple[int, ...]] = {}
+        self.block_refs: Dict[bytes, int] = {}
+        self.quarantined: Dict[bytes, Set[int]] = {}
+        self._pins: Dict[bytes, int] = {}
         self._claims: Dict[bytes, threading.Event] = {}
+        self._retire_listeners: List[Callable] = []
+        self._quarantine_listeners: List[Callable] = []
         self._rr = 0
         self._lock = threading.Lock()
 
@@ -161,12 +226,76 @@ class MetadataManager:
         if ev is not None:
             ev.set()
 
+    # -- pins (in-flight write protection vs GC) -----------------------------
+    def pin_blocks(self, digests):
+        """Pin digests against GC for the duration of an in-flight write
+        (claim -> store -> commit).  Counted: release with an identical
+        ``unpin_blocks`` call."""
+        with self._lock:
+            for d in set(digests):
+                self._pins[d] = self._pins.get(d, 0) + 1
+
+    def unpin_blocks(self, digests):
+        with self._lock:
+            for d in set(digests):
+                n = self._pins.get(d, 0) - 1
+                if n > 0:
+                    self._pins[d] = n
+                else:
+                    self._pins.pop(d, None)
+
     # -- block-maps ----------------------------------------------------------
     def commit_blockmap(self, path: str, blocks: List[BlockMeta],
                         total_len: int):
+        root = merkle_root([b.digest for b in blocks])
         with self._lock:
             self.files.setdefault(path, []).append(
-                FileVersion(blocks=blocks, total_len=total_len))
+                FileVersion(blocks=blocks, total_len=total_len,
+                            merkle_root=root))
+            for b in blocks:
+                self.block_refs[b.digest] = \
+                    self.block_refs.get(b.digest, 0) + 1
+
+    def retire_versions(self, path: str, keep_latest: int = 1):
+        """Retire old versions of ``path`` (``keep_latest=0`` deletes the
+        file).  Decrements block refcounts and returns the list of
+        newly-orphaned digests (refcount hit zero), which is also passed
+        to retire listeners so the runtime GC can reclaim eagerly."""
+        orphans: List[bytes] = []
+        with self._lock:
+            versions = self.files.get(path)
+            if not versions:
+                return orphans
+            cut = max(0, len(versions) - keep_latest) if keep_latest > 0 \
+                else len(versions)
+            drop, keep = versions[:cut], versions[cut:]
+            if keep:
+                self.files[path] = keep
+            else:
+                self.files.pop(path, None)
+            for v in drop:
+                for b in v.blocks:
+                    n = self.block_refs.get(b.digest, 0) - 1
+                    if n > 0:
+                        self.block_refs[b.digest] = n
+                    else:
+                        self.block_refs.pop(b.digest, None)
+                        orphans.append(b.digest)
+            listeners = list(self._retire_listeners)
+        for cb in listeners:
+            try:
+                cb(path, list(orphans))
+            except Exception:
+                pass
+        return orphans
+
+    def delete_file(self, path: str):
+        return self.retire_versions(path, keep_latest=0)
+
+    def add_retire_listener(self, cb: Callable):
+        """cb(path, orphaned_digests) after versions are retired."""
+        with self._lock:
+            self._retire_listeners.append(cb)
 
     def get_blockmap(self, path: str,
                      version: int = -1) -> Optional[FileVersion]:
@@ -198,6 +327,49 @@ class MetadataManager:
         with self._lock:
             return sorted(self.files)
 
+    # -- quarantine ----------------------------------------------------------
+    def quarantine_block(self, digest: bytes, node_id: int):
+        """Record that ``node_id``'s copy of ``digest`` is corrupt: the
+        node is removed from the digest's registry locations (reads and
+        placement avoid it), the node-side copy is tainted in place, and
+        quarantine listeners (the runtime repair pipeline) are notified
+        with the surviving healthy locations.  Returns those locations."""
+        with self._lock:
+            locs = self.block_registry.get(digest)
+            remaining: Tuple[int, ...] = ()
+            if locs is not None:
+                remaining = tuple(n for n in locs if n != node_id)
+                self.block_registry[digest] = remaining
+            self.quarantined.setdefault(digest, set()).add(node_id)
+            listeners = list(self._quarantine_listeners)
+        node = self.nodes[node_id]
+        if not node.failed:
+            node.taint(digest)
+        for cb in listeners:
+            try:
+                cb(digest, node_id, remaining)
+            except Exception:
+                pass
+        return remaining
+
+    def is_quarantined(self, digest: bytes, node_id: int) -> bool:
+        with self._lock:
+            return node_id in self.quarantined.get(digest, ())
+
+    def clear_quarantine(self, digest: bytes, node_id: int):
+        """A verified fresh copy landed on ``node_id`` (repair)."""
+        with self._lock:
+            nodes = self.quarantined.get(digest)
+            if nodes is not None:
+                nodes.discard(node_id)
+                if not nodes:
+                    self.quarantined.pop(digest, None)
+
+    def add_quarantine_listener(self, cb: Callable):
+        """cb(digest, node_id, remaining_locations) on quarantine."""
+        with self._lock:
+            self._quarantine_listeners.append(cb)
+
     # -- failure handling ----------------------------------------------------
     def handle_node_failure(self, node_id: int) -> int:
         """Re-replicate blocks that lost a replica.  Returns blocks moved."""
@@ -221,24 +393,54 @@ class MetadataManager:
             self.block_registry[digest] = tuple(sorted(live))
         return moved
 
-    def gc_unreferenced(self) -> int:
-        """Delete blocks not referenced by any committed block-map."""
-        referenced = set()
-        for versions in self.files.values():
-            for v in versions:
-                for b in v.blocks:
-                    referenced.add(b.digest)
+    def gc_collect(self, digests=None) -> int:
+        """Reclaim orphaned blocks.  ``digests`` restricts the sweep to
+        known candidates (retire-event orphans); default scans every
+        registered digest with refcount zero.  A digest is reclaimed
+        only if it is unreferenced, unpinned, AND unclaimed — a block a
+        concurrent writer has claimed (or dedup-hit and pinned) is never
+        collected, even at refcount zero.  Returns node-block copies
+        freed (quarantined copies included)."""
+        with self._lock:
+            if digests is None:
+                cands = [d for d in self.block_registry
+                         if self.block_refs.get(d, 0) <= 0]
+            else:
+                cands = list(digests)
+            victims = []
+            for d in cands:
+                if (self.block_refs.get(d, 0) > 0 or d in self._pins
+                        or d in self._claims):
+                    continue
+                locs = set(self.block_registry.pop(d, ()))
+                locs |= self.quarantined.pop(d, set())
+                self.block_refs.pop(d, None)
+                victims.append((d, locs))
         removed = 0
-        for digest in list(self.block_registry):
-            if digest in referenced:
-                continue
-            for nid in self.block_registry[digest]:
+        for d, locs in victims:
+            for nid in locs:
                 node = self.nodes[nid]
-                if not node.failed:
-                    node.blocks.pop(digest, None)
+                if not node.failed and node.drop(d):
                     removed += 1
-            del self.block_registry[digest]
         return removed
+
+    def resync_refcounts(self):
+        """Recount block refcounts from the committed block-maps — the
+        authoritative source.  Recovers from out-of-band mutation of
+        ``files`` (tests / administrative surgery)."""
+        with self._lock:
+            refs: Dict[bytes, int] = {}
+            for versions in self.files.values():
+                for v in versions:
+                    for b in v.blocks:
+                        refs[b.digest] = refs.get(b.digest, 0) + 1
+            self.block_refs = refs
+
+    def gc_unreferenced(self) -> int:
+        """Full-scan GC: resync refcounts from the committed block-maps,
+        then reclaim every orphan (refcount-zero registered digest)."""
+        self.resync_refcounts()
+        return self.gc_collect()
 
     def stats(self) -> dict:
         return {
@@ -247,6 +449,8 @@ class MetadataManager:
             "stored_bytes": sum(n.used_bytes() for n in self.nodes
                                 if not n.failed),
             "live_nodes": sum(not n.failed for n in self.nodes),
+            "quarantined": sum(len(v) for v in self.quarantined.values()),
+            "pinned": len(self._pins),
         }
 
 

@@ -60,6 +60,7 @@ Job normal forms
 """
 from __future__ import annotations
 
+import collections
 import queue
 import threading
 import time
@@ -70,6 +71,58 @@ import jax
 import numpy as np
 
 from repro.kernels import ops
+
+
+class LaneQueue:
+    """Two-priority job queue: the foreground lane always dequeues before
+    the low-priority lane (background scrub/repair traffic from the node
+    runtime), and shutdown sentinels (``None``) dequeue only once both
+    lanes are empty — so ``shutdown()`` still drains queued background
+    jobs instead of orphaning their waiters.  API mirrors the subset of
+    ``queue.Queue`` the managers use (put/get/get_nowait)."""
+
+    def __init__(self):
+        self._cv = threading.Condition()
+        self._fg: collections.deque = collections.deque()
+        self._bg: collections.deque = collections.deque()
+        self._sentinels = 0
+
+    def put(self, item, lane: str = "fg"):
+        with self._cv:
+            if item is None:
+                self._sentinels += 1
+            elif lane == "fg":
+                self._fg.append(item)
+            else:
+                self._bg.append(item)
+            self._cv.notify()
+
+    def _pop_locked(self):
+        if self._fg:
+            return self._fg.popleft()
+        if self._bg:
+            return self._bg.popleft()
+        self._sentinels -= 1            # caller checked _sentinels > 0
+        return None
+
+    def _nonempty(self) -> bool:
+        return bool(self._fg or self._bg or self._sentinels)
+
+    def get(self, timeout: Optional[float] = None):
+        with self._cv:
+            if not self._cv.wait_for(self._nonempty, timeout):
+                raise queue.Empty
+            return self._pop_locked()
+
+    def get_nowait(self):
+        with self._cv:
+            if not self._nonempty():
+                raise queue.Empty
+            return self._pop_locked()
+
+    def qsize(self) -> int:
+        with self._cv:
+            return len(self._fg) + len(self._bg)
 
 
 @dataclass(eq=False)                   # identity semantics: jobs hold
@@ -88,6 +141,10 @@ class Job:                             # numpy fields, and the manager's
     lens: Optional[np.ndarray] = None
     # jobs with equal fuse keys may share one kernel launch
     fuse_key: tuple = ()
+    # 'fg' = foreground client traffic; 'scrub' = low-priority background
+    # traffic (node-runtime scrub/repair) that yields to foreground jobs
+    # at the queue and is tracked by the scrub_* stats counters
+    lane: str = "fg"
     # pow2-padded staging shape, used to bound fused-batch memory:
     # the fused matrix is (sum n_rows) x (max staged_width) bytes
     n_rows: int = 1
@@ -150,6 +207,13 @@ class CrystalTPU:
                          lone synchronous write never stalls waiting
                          for writers that don't exist; raise it for
                          bursty many-writer workloads.
+
+    Priority lanes: ``submit(..., lane='scrub')`` queues the job on a
+    low-priority lane that managers only drain when no foreground job is
+    waiting — background integrity scrubbing and repair verification
+    (repro.core.noderuntime) share the engine without delaying client
+    writes/reads.  Scrub-lane traffic is tracked by the ``scrub_jobs`` /
+    ``scrub_launches`` / ``scrub_coalesced`` counters.
     """
 
     def __init__(self, devices=None, buffer_reuse: bool = True,
@@ -168,14 +232,16 @@ class CrystalTPU:
         self.max_fused_rows = max(1, int(max_fused_rows))
         self.max_fused_bytes = max(1, int(max_fused_bytes))
         self.coalesce_window_s = coalesce_window_s
-        self.outstanding: "queue.Queue[Optional[Job]]" = queue.Queue()
+        self.outstanding: LaneQueue = LaneQueue()
         self.idle: "queue.Queue[dict]" = queue.Queue()
         for _ in range(n_slots):
             self.idle.put({})          # slot: staging-buffer cache by shape
         self.running: List[Job] = []
         self._lock = threading.Lock()
         self.stats = {"jobs": 0, "bytes": 0, "launches": 0,
-                      "coalesced": 0, "max_fused": 0}
+                      "coalesced": 0, "max_fused": 0,
+                      "scrub_jobs": 0, "scrub_launches": 0,
+                      "scrub_coalesced": 0}
         self._managers = [
             threading.Thread(target=self._manager_loop, args=(d,),
                              daemon=True, name=f"crystal-mgr-{i}")
@@ -188,11 +254,18 @@ class CrystalTPU:
     # submission API
     # ------------------------------------------------------------------
     def submit(self, kind: str, data: np.ndarray, meta=None,
-               callback=None) -> Job:
+               callback=None, lane: str = "fg") -> Job:
+        """Submit one hashing job.  ``lane='scrub'`` marks background
+        node-runtime traffic: it queues behind every foreground job
+        (foreground keeps engine priority) and is tracked by the
+        ``scrub_*`` stats counters, but fuses with any same-fuse-key
+        job once a manager picks it up."""
         if not self._alive:
             raise RuntimeError("CrystalTPU engine is shut down")
+        if lane not in ("fg", "scrub"):
+            raise ValueError(f"unknown lane {lane!r}")
         job = Job(kind=kind, data=np.asarray(data), meta=meta or {},
-                  callback=callback)
+                  callback=callback, lane=lane)
         if kind == "direct":
             job.rows, job.lens = _normalize_direct(job.data, job.meta)
             job.fuse_key = ("direct",)
@@ -217,7 +290,7 @@ class CrystalTPU:
             job.staged_width = 4 << (max(n_words, 4) - 1).bit_length()
         else:
             job.fuse_key = (kind, id(job))      # never fuses; error later
-        self.outstanding.put(job)
+        self.outstanding.put(job, lane=job.lane)
         return job
 
     def map_stream(self, kind: str, buffers, meta=None) -> List[Job]:
@@ -349,13 +422,19 @@ class CrystalTPU:
                         except Exception:
                             pass
 
-    def _account(self, n_jobs: int, nbytes: int):
+    def _account(self, n_jobs: int, nbytes: int, n_scrub: int = 0):
         with self._lock:
             self.stats["jobs"] += n_jobs
             self.stats["bytes"] += nbytes
             self.stats["launches"] += 1
             self.stats["coalesced"] += n_jobs - 1
             self.stats["max_fused"] = max(self.stats["max_fused"], n_jobs)
+            if n_scrub:
+                # a launch containing any scrub job counts once, so
+                # scrub_launches < scrub_jobs is the fused-scrub signature
+                self.stats["scrub_jobs"] += n_scrub
+                self.stats["scrub_launches"] += 1
+                self.stats["scrub_coalesced"] += n_scrub - 1
 
     # -- fused direct batch --------------------------------------------
     def _execute_direct(self, device, slot: dict, batch: List[Job]):
@@ -397,7 +476,8 @@ class CrystalTPU:
             j.result = host[r:r + n].copy()
             j.timings = dict(timings)       # batch-wide stage times
             r += n
-        self._account(len(batch), int(np.sum(lens)))
+        self._account(len(batch), int(np.sum(lens)),
+                      sum(j.lane != "fg" for j in batch))
 
     # -- fused streaming batch (sliding / gear) ------------------------
     def _execute_stream_batch(self, device, slot: dict, batch: List[Job]):
@@ -449,7 +529,8 @@ class CrystalTPU:
         timings = {"in": t1 - t0, "kernel": t2 - t1, "out": t3 - t2}
         for j in batch:
             j.timings = dict(timings)       # batch-wide stage times
-        self._account(len(batch), int(sum(lens)))
+        self._account(len(batch), int(sum(lens)),
+                      sum(j.lane != "fg" for j in batch))
 
 
 # ----------------------------------------------------------------------

@@ -33,6 +33,15 @@ assemble as staged pipeline threads with replica failover retained:
 verify of read i overlaps fetch of read i+1, and concurrent readers'
 verify requests coalesce across SAIs through the shared engine.
 
+A verify failure no longer kills the read outright: the corrupt copy is
+reported to the metadata manager as a quarantine hint (feeding the node
+runtime's repair pipeline, repro.core.noderuntime) and the block is
+speculatively re-fetched from the next replica; IOError is raised only
+when every replica fails its digest check.  An optional block-level LRU
+read cache (``SAIConfig.read_cache_bytes``, default off) serves repeat
+reads of hot verified blocks without touching the nodes or the engine
+(hit/miss counters in ``SAI.read_stats``).
+
 Configurations mirror the paper's evaluation matrix:
   ca='none'                 -> non-CA (direct write, no hashing)
   ca='fixed'                -> fixed-size blocks + direct hashing
@@ -47,6 +56,7 @@ import hashlib
 import queue
 import threading
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -70,6 +80,8 @@ class SAIConfig:
     hasher: str = "tpu"               # tpu | cpu | infinite
     stripe_width: int = 4
     store_lanes: int = 4              # parallel per-path commit lanes
+    read_cache_bytes: int = 0         # block-level LRU read cache budget
+    #                                   (0 = off); hits skip fetch+verify
 
 
 @dataclass
@@ -172,6 +184,15 @@ class SAI:
         self.manager = manager
         self.cfg = config
         self.crystal = crystal
+        # block-level LRU read cache (digest -> verified bytes), active
+        # when cfg.read_cache_bytes > 0; hits skip fetch AND re-verify
+        # (entries are inserted only after a digest check passed)
+        self._cache: "OrderedDict[bytes, bytes]" = OrderedDict()
+        self._cache_used = 0
+        self._cache_lock = threading.Lock()
+        self.read_stats: Dict[str, int] = {"cache_hits": 0,
+                                           "cache_misses": 0,
+                                           "refetches": 0}
         self._pipe_lock = threading.Lock()
         self._chunk_q: Optional[queue.Queue] = None
         self._store_qs: Optional[List[queue.Queue]] = None
@@ -191,25 +212,7 @@ class SAI:
         return self.crystal
 
     def _pack_chunks(self, chunks: List[bytes]):
-        """Pack chunks into padded rows for a direct-hash request.
-
-        Canonical block digest = MD5( zero-pad-to-word(data) ||
-        u32_le(byte_length) ): the length trailer disambiguates chunks
-        that differ only in trailing zero padding (CDC boundaries are
-        byte-exact).  Row width is bucketed to a power of two to bound
-        jit retraces across writes with ragged max-chunk lengths."""
-        seg = max(len(c) for c in chunks)
-        seg = (seg + 3) // 4 * 4 + 4
-        seg = 1 << (seg - 1).bit_length()
-        rows = np.zeros((len(chunks), seg), np.uint8)
-        lens = np.zeros((len(chunks),), np.int64)
-        for i, c in enumerate(chunks):
-            padded = (len(c) + 3) // 4 * 4
-            rows[i, :len(c)] = np.frombuffer(c, np.uint8)
-            rows[i, padded:padded + 4] = np.frombuffer(
-                np.uint32(len(c)).tobytes(), np.uint8)
-            lens[i] = padded + 4
-        return rows, lens
+        return pack_blocks(chunks)
 
     def _submit_hash(self, chunks: List[bytes]) -> _HashHandle:
         """Start hashing ``chunks``; non-blocking on the tpu path."""
@@ -274,39 +277,48 @@ class SAI:
         stored, ours to store, or being stored by a concurrent writer.
         All own claims are stored (and released) before waiting on other
         writers' claims — a writer never holds an unfinished claim while
-        waiting, so claim waits cannot deadlock."""
+        waiting, so claim waits cannot deadlock.
+
+        Every digest is pinned for the whole claim -> store -> commit
+        span, so the runtime GC can never reclaim a dedup-hit (or
+        freshly stored) block before the block-map referencing it is
+        committed."""
         mgr = self.manager
-        locmap, claimed, waits = mgr.claim_blocks(digests)
-        new_idx = set()
+        mgr.pin_blocks(digests)
         try:
+            locmap, claimed, waits = mgr.claim_blocks(digests)
+            new_idx = set()
+            try:
+                for i, (chunk, digest) in enumerate(zip(chunks, digests)):
+                    if digest in claimed:
+                        locs = mgr.place(digest)
+                        for nid in locs:
+                            mgr.nodes[nid].put(digest, chunk)
+                        mgr.finish_claim(digest, locs)
+                        claimed.remove(digest)
+                        locmap[digest] = locs
+                        new_idx.add(i)
+            finally:
+                for digest in list(claimed):         # error path: release
+                    mgr.finish_claim(digest, None)
+            blocks: List[BlockMeta] = []
             for i, (chunk, digest) in enumerate(zip(chunks, digests)):
-                if digest in claimed:
-                    locs = mgr.place(digest)
-                    for nid in locs:
-                        mgr.nodes[nid].put(digest, chunk)
-                    mgr.finish_claim(digest, locs)
-                    claimed.remove(digest)
+                locs = locmap.get(digest)
+                if locs is None:
+                    waits[digest].wait()
+                    locs, is_new = self._resolve_block(digest, chunk)
+                    if is_new:
+                        new_idx.add(i)
                     locmap[digest] = locs
-                    new_idx.add(i)
+                if i in new_idx:
+                    stats.new_blocks += 1
+                    stats.new_bytes += len(chunk)
+                else:
+                    stats.dup_blocks += 1
+                blocks.append(BlockMeta(digest, len(chunk), tuple(locs)))
+            mgr.commit_blockmap(path, blocks, total_len)
         finally:
-            for digest in list(claimed):         # error path: release
-                mgr.finish_claim(digest, None)
-        blocks: List[BlockMeta] = []
-        for i, (chunk, digest) in enumerate(zip(chunks, digests)):
-            locs = locmap.get(digest)
-            if locs is None:
-                waits[digest].wait()
-                locs, is_new = self._resolve_block(digest, chunk)
-                if is_new:
-                    new_idx.add(i)
-                locmap[digest] = locs
-            if i in new_idx:
-                stats.new_blocks += 1
-                stats.new_bytes += len(chunk)
-            else:
-                stats.dup_blocks += 1
-            blocks.append(BlockMeta(digest, len(chunk), tuple(locs)))
-        mgr.commit_blockmap(path, blocks, total_len)
+            mgr.unpin_blocks(digests)
         return stats
 
     def _resolve_block(self, digest: bytes, chunk: bytes):
@@ -338,20 +350,26 @@ class SAI:
         t0 = time.perf_counter()
         bs = cfg.block_size
         blocks = []
-        for i in range(0, max(len(data), 1), bs):
-            chunk = data[i:i + bs]
-            with _ORACLE_LOCK:
-                _ORACLE_COUNTER[0] += 1
-                n = _ORACLE_COUNTER[0]
-            digest = b"raw!" + n.to_bytes(12, "little")
-            locs = mgr.place(digest)
-            for nid in locs:
-                mgr.nodes[nid].put(digest, chunk)
-            mgr.register_block(digest, locs)
-            blocks.append(BlockMeta(digest, len(chunk), locs))
-            stats.new_blocks += 1
-            stats.new_bytes += len(chunk)
-        mgr.commit_blockmap(path, blocks, len(data))
+        pinned: List[bytes] = []
+        try:
+            for i in range(0, max(len(data), 1), bs):
+                chunk = data[i:i + bs]
+                with _ORACLE_LOCK:
+                    _ORACLE_COUNTER[0] += 1
+                    n = _ORACLE_COUNTER[0]
+                digest = b"raw!" + n.to_bytes(12, "little")
+                mgr.pin_blocks([digest])     # GC guard until commit
+                pinned.append(digest)
+                locs = mgr.place(digest)
+                for nid in locs:
+                    mgr.nodes[nid].put(digest, chunk)
+                mgr.register_block(digest, locs)
+                blocks.append(BlockMeta(digest, len(chunk), locs))
+                stats.new_blocks += 1
+                stats.new_bytes += len(chunk)
+            mgr.commit_blockmap(path, blocks, len(data))
+        finally:
+            mgr.unpin_blocks(pinned)
         stats.stage_s = {"store": time.perf_counter() - t0}
         return stats
 
@@ -495,77 +513,169 @@ class SAI:
     # ------------------------------------------------------------------
     # read path
     # ------------------------------------------------------------------
-    def _fetch_blocks(self, blocks, locmap=None) -> List[bytes]:
+    # -- block-level LRU read cache (digest -> verified bytes) ---------
+    def _cache_get(self, digest: bytes) -> Optional[bytes]:
+        if self.cfg.read_cache_bytes <= 0:
+            return None
+        with self._cache_lock:
+            data = self._cache.get(digest)
+            if data is None:
+                self.read_stats["cache_misses"] += 1
+                return None
+            self._cache.move_to_end(digest)
+            self.read_stats["cache_hits"] += 1
+            return data
+
+    def _cache_put(self, digest: bytes, data: bytes):
+        cap = self.cfg.read_cache_bytes
+        if cap <= 0 or len(data) > cap:
+            return
+        with self._cache_lock:
+            if digest in self._cache:
+                self._cache.move_to_end(digest)
+                return
+            self._cache[digest] = data
+            self._cache_used += len(data)
+            while self._cache_used > cap:
+                _, old = self._cache.popitem(last=False)
+                self._cache_used -= len(old)
+
+    def _fetch_blocks(self, blocks, locmap=None):
         """Fetch every block of a file version with replica failover.
         ``locmap`` carries the replica locations resolved by
         ``get_read_plan`` under one lock; blocks missing from it fall
-        back to the block-map's recorded nodes."""
+        back to the block-map's recorded nodes (quarantined replicas
+        are deprioritized to last resort).  Returns ``(datas, srcs)``
+        where ``srcs[i]`` is the node id that served block i, or None
+        for a read-cache hit (already verified)."""
         if locmap is None:
             locmap = {}
+        mgr = self.manager
+        # snapshot reference, checked without the manager lock: a
+        # quarantine landing mid-read at worst serves the corrupt copy,
+        # which the verify + speculative-refetch path then catches
+        qmap = mgr.quarantined
+
         def try_locs(digest, locs):
             err = None
+            # healthy replicas first; quarantined copies only as a
+            # last resort (unverified reads of fully-corrupt blocks)
+            qset = qmap.get(digest) if qmap else None
+            if qset:
+                locs = sorted(locs, key=lambda nid: nid in qset)
             for nid in locs:
                 try:
-                    return self.manager.nodes[nid].get(digest), None
+                    return mgr.nodes[nid].get(digest), nid, None
                 except (NodeFailure, KeyError) as e:
                     err = e
-            return None, err
+            return None, None, err
 
         datas: List[bytes] = []
+        srcs: List[Optional[int]] = []
         for b in blocks:
-            data, last_err = try_locs(b.digest,
-                                      locmap.get(b.digest) or b.nodes)
+            cached = self._cache_get(b.digest)
+            if cached is not None:
+                datas.append(cached)
+                srcs.append(None)
+                continue
+            data, src, last_err = try_locs(b.digest,
+                                           locmap.get(b.digest) or b.nodes)
             if data is None:
                 # the plan may have gone stale (a node failed and
                 # re-replication moved the block after the snapshot):
                 # retry with a fresh registry lookup before giving up
-                data, err2 = try_locs(b.digest,
-                                      self.manager.lookup_block(b.digest))
+                data, src, err2 = try_locs(b.digest,
+                                           mgr.lookup_block(b.digest))
                 last_err = err2 or last_err
             if data is None:
                 raise NodeFailure(
                     f"block {b.digest.hex()[:8]} unavailable: {last_err}")
             datas.append(data)
-        return datas
+            srcs.append(src)
+        return datas, srcs
 
-    def _submit_verify(self, blocks, datas: List[bytes]):
+    def _submit_verify(self, blocks, datas: List[bytes], srcs=None):
         """Start re-hashing the verifiable fetched blocks as fused
         direct requests (non-blocking on the tpu path): at most
         ceil(n / max_batch) engine submissions, so one huge read never
         stages a single unbounded [n, W] padded matrix.  Synthetic
-        ``raw!`` digests (ca='none') carry no content hash and are
-        skipped."""
-        checkable = [(b, d) for b, d in zip(blocks, datas)
-                     if not b.digest.startswith(b"raw!")]
+        ``raw!`` digests (ca='none') carry no content hash and cache
+        hits were verified at insertion — both are skipped.  Returns
+        ``(handles, idxs)`` with idxs the block indices under check."""
+        idxs = [i for i, b in enumerate(blocks)
+                if not b.digest.startswith(b"raw!")
+                and (srcs is None or srcs[i] is not None)]
         group = self.engine.max_batch if self.cfg.hasher == "tpu" \
-            else max(len(checkable), 1)
-        handles = [self._submit_hash([d for _, d in checkable[i:i + group]])
-                   for i in range(0, len(checkable), group)]
-        return handles, [b for b, _ in checkable]
+            else max(len(idxs), 1)
+        handles = [self._submit_hash([datas[i] for i in idxs[k:k + group]])
+                   for k in range(0, len(idxs), group)]
+        return handles, idxs
 
     @staticmethod
     def _gather_digests(handles) -> List[bytes]:
         return [d for h in handles for d in h.wait()]
 
-    @staticmethod
-    def _check_digests(blocks, digests: List[bytes]):
-        for b, digest in zip(blocks, digests):
-            if digest != b.digest:
-                raise IOError(
-                    f"integrity check failed for {b.digest.hex()[:8]}")
+    def _finish_verify(self, blocks, datas, srcs, handles, idxs,
+                       locmap=None):
+        """Compare recomputed digests; on mismatch, speculatively
+        re-fetch the block from the next replica (reporting the corrupt
+        copy to the metadata manager as a quarantine hint for the node
+        runtime's repair pipeline) and only raise IOError once every
+        replica is exhausted.  Verified bytes enter the read cache."""
+        digests = self._gather_digests(handles)
+        for i, digest in zip(idxs, digests):
+            if digest != blocks[i].digest:
+                self._refetch_block(blocks[i], i, datas, srcs, locmap)
+        for i in idxs:
+            self._cache_put(blocks[i].digest, datas[i])
+
+    def _refetch_block(self, b: BlockMeta, i: int, datas, srcs,
+                       locmap=None):
+        """Speculative re-fetch: the copy from ``srcs[i]`` failed its
+        digest check — quarantine it and try the remaining replicas
+        (freshest registry view first, then the block-map's recorded
+        nodes) until one verifies."""
+        mgr = self.manager
+        tried = set()
+        if srcs[i] is not None:
+            tried.add(srcs[i])
+            mgr.quarantine_block(b.digest, srcs[i])
+        candidates = [nid for nid in
+                      (tuple(mgr.lookup_block(b.digest))
+                       + tuple((locmap or {}).get(b.digest, ())) + b.nodes)
+                      if nid not in tried]
+        for nid in dict.fromkeys(candidates):     # dedup, keep order
+            tried.add(nid)
+            try:
+                data = mgr.nodes[nid].get(b.digest)
+            except (NodeFailure, KeyError):
+                continue
+            if self._hash_chunks([data])[0] == b.digest:
+                with self._cache_lock:
+                    self.read_stats["refetches"] += 1
+                datas[i] = data
+                srcs[i] = nid
+                return
+            mgr.quarantine_block(b.digest, nid)   # this copy is bad too
+        raise IOError(
+            f"integrity check failed for {b.digest.hex()[:8]}")
 
     def read(self, path: str, version: int = -1,
              verify: bool = True) -> bytes:
         """Verified read: all fetched blocks are re-hashed by ONE fused
         engine request (per-block ``hashlib`` only on the cpu hasher),
-        digests are compared on the host, and the file is assembled."""
+        digests are compared on the host, and the file is assembled.
+        A digest mismatch triggers speculative re-fetch from the next
+        replica (plus a quarantine hint to the node runtime) before
+        raising IOError."""
         fv, locmap = self.manager.get_read_plan(path, version)
         if fv is None:
             raise FileNotFoundError(path)
-        datas = self._fetch_blocks(fv.blocks, locmap)
+        datas, srcs = self._fetch_blocks(fv.blocks, locmap)
         if verify:
-            handles, checkable = self._submit_verify(fv.blocks, datas)
-            self._check_digests(checkable, self._gather_digests(handles))
+            handles, idxs = self._submit_verify(fv.blocks, datas, srcs)
+            self._finish_verify(fv.blocks, datas, srcs, handles, idxs,
+                                locmap)
         return b"".join(datas)[:fv.total_len]
 
     def read_async(self, path: str, version: int = -1,
@@ -610,13 +720,14 @@ class SAI:
                 fv, locmap = self.manager.get_read_plan(path, version)
                 if fv is None:
                     raise FileNotFoundError(path)
-                datas = self._fetch_blocks(fv.blocks, locmap)
+                datas, srcs = self._fetch_blocks(fv.blocks, locmap)
                 if verify:
-                    handles, checkable = self._submit_verify(fv.blocks,
-                                                             datas)
+                    handles, idxs = self._submit_verify(fv.blocks, datas,
+                                                        srcs)
                 else:
-                    handles, checkable = None, []
-                verify_q.put((fut, fv, datas, handles, checkable))
+                    handles, idxs = None, []
+                verify_q.put((fut, fv, datas, srcs, handles, idxs,
+                              locmap))
             except BaseException as e:
                 fut._fail(e)
             finally:
@@ -628,16 +739,40 @@ class SAI:
             if item is None:                         # close() sentinel
                 verify_q.task_done()
                 return
-            fut, fv, datas, handles, checkable = item
+            fut, fv, datas, srcs, handles, idxs, locmap = item
             try:
                 if handles is not None:
-                    self._check_digests(checkable,
-                                        self._gather_digests(handles))
+                    self._finish_verify(fv.blocks, datas, srcs, handles,
+                                        idxs, locmap)
                 fut._resolve(b"".join(datas)[:fv.total_len])
             except BaseException as e:
                 fut._fail(e)
             finally:
                 verify_q.task_done()
+
+
+def pack_blocks(chunks: List[bytes]):
+    """Pack chunks into padded rows for a direct-hash request.
+
+    Canonical block digest = MD5( zero-pad-to-word(data) ||
+    u32_le(byte_length) ): the length trailer disambiguates chunks
+    that differ only in trailing zero padding (CDC boundaries are
+    byte-exact).  Row width is bucketed to a power of two to bound
+    jit retraces across writes with ragged max-chunk lengths.  Shared
+    by the SAI write/read paths and the node runtime's scrub/repair
+    verification (repro.core.noderuntime)."""
+    seg = max(len(c) for c in chunks)
+    seg = (seg + 3) // 4 * 4 + 4
+    seg = 1 << (seg - 1).bit_length()
+    rows = np.zeros((len(chunks), seg), np.uint8)
+    lens = np.zeros((len(chunks),), np.int64)
+    for i, c in enumerate(chunks):
+        padded = (len(c) + 3) // 4 * 4
+        rows[i, :len(c)] = np.frombuffer(c, np.uint8)
+        rows[i, padded:padded + 4] = np.frombuffer(
+            np.uint32(len(c)).tobytes(), np.uint8)
+        lens[i] = padded + 4
+    return rows, lens
 
 
 def _pad4(data: bytes) -> bytes:
