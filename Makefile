@@ -18,9 +18,12 @@ bench:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/run.py
 
 # tiny-size perf smoke (CI): exercises the engine/pipeline benchmark
-# paths and leaves the CSV in bench-smoke.csv for the artifact upload
+# paths, leaves the CSV in bench-smoke.csv and the machine-readable
+# summary (rows + engine/gateway counters) in BENCH_smoke.json for the
+# artifact uploads
 # (redirect, don't pipe: a module failure must fail the make target)
 bench-smoke:
-	BENCH_SMOKE=1 PYTHONPATH=src:. $(PYTHON) benchmarks/run.py \
-		fig4 fig11 read scrub > bench-smoke.csv
+	BENCH_SMOKE=1 BENCH_JSON=BENCH_smoke.json PYTHONPATH=src:. \
+		$(PYTHON) benchmarks/run.py \
+		fig4 fig11 read scrub gateway > bench-smoke.csv
 	@cat bench-smoke.csv

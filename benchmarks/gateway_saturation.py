@@ -1,0 +1,96 @@
+"""Gateway saturation: aggregate throughput and per-tenant fairness as
+the number of concurrent client sessions scales (the serving-front-end
+version of the paper's competing-applications evaluation, §V).
+
+Each client opens its own gateway session (distinct tenant, equal
+weight) and pushes a burst of framed writes, then reads one file back
+verified.  All tenants' hash traffic funnels through ONE shared engine,
+so the run reports the cross-client coalescing signature —
+``engine launches < client requests`` — alongside per-tenant throughput
+rows (``gateway/tenant_*``; the CI smoke asserts these are emitted) and
+a fairness row (min/max tenant throughput ratio; 1.0 = perfectly fair).
+Admission rejections ride along: a saturated run backpressures instead
+of queueing without bound.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import mbps, scaled
+from repro.core import CrystalTPU, SAIConfig, make_store
+from repro.serve.storage_client import GatewayClient
+from repro.serve.storage_service import GatewayConfig, StorageGateway
+
+CLIENT_COUNTS = scaled([2, 4, 8], [4])
+FILES_PER_CLIENT = scaled(8, 3)
+FILE_KB = scaled(512, 32)
+BLOCK_KB = scaled(128, 8)
+
+
+def _client_burst(client: GatewayClient, datas, done):
+    t0 = time.perf_counter()
+    for i, d in enumerate(datas):
+        client.write_retrying(f"/{client.tenant}/{i}", d)
+    got = client.read(f"/{client.tenant}/0")
+    assert got == datas[0]
+    done[client.tenant] = time.perf_counter() - t0
+
+
+def run() -> list:
+    rows: list = []
+    rng = np.random.default_rng(13)
+    for n_clients in CLIENT_COUNTS:
+        mgr, _ = make_store(4)
+        engine = CrystalTPU(coalesce_window_s=0.02)
+        gw = StorageGateway(mgr, engine=engine, config=GatewayConfig(
+            sai=SAIConfig(ca="fixed", hasher="tpu",
+                          block_size=BLOCK_KB << 10)))
+        clients = [GatewayClient(gw, f"t{i}") for i in range(n_clients)]
+        per_client = [
+            [rng.integers(0, 256, FILE_KB << 10,
+                          dtype=np.uint8).tobytes()
+             for _ in range(FILES_PER_CLIENT)]
+            for _ in range(n_clients)]
+        done: dict = {}
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=_client_burst,
+                                    args=(c, d, done), daemon=True)
+                   for c, d in zip(clients, per_client)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=600)
+        elapsed = time.perf_counter() - t0
+        stats = gw.snapshot_stats()
+        gw.close()
+        engine.shutdown()
+
+        client_bytes = FILES_PER_CLIENT * (FILE_KB << 10)
+        rates = {}
+        for name, t in sorted(done.items()):
+            rates[name] = mbps(client_bytes, t)
+            rows.append((
+                f"gateway/tenant_{name}/{n_clients}c",
+                t / FILES_PER_CLIENT * 1e6,
+                f"{rates[name]:.1f}MBps_completed="
+                f"{stats['tenants'][name]['completed']}_rejected="
+                f"{stats['tenants'][name]['rejected']}"))
+        total = client_bytes * n_clients
+        rows.append((f"gateway/aggregate/{n_clients}c",
+                     elapsed / max(n_clients * FILES_PER_CLIENT, 1) * 1e6,
+                     f"{mbps(total, elapsed):.1f}MBps"))
+        requests = n_clients * (FILES_PER_CLIENT + 1)   # writes + 1 read
+        rows.append((f"gateway/engine/{n_clients}c",
+                     float(stats["jobs"]),
+                     f"launches={stats['launches']}_requests={requests}_"
+                     f"rejections={stats['admission_rejections']}"))
+        if rates:
+            fair = min(rates.values()) / max(max(rates.values()), 1e-9)
+            rows.append((f"gateway/fairness/{n_clients}c", fair * 1e6,
+                         f"min_over_max={fair:.2f}"))
+    # the smoke CI contract: per-tenant throughput rows MUST be present
+    assert any(name.startswith("gateway/tenant_") for name, _, _ in rows)
+    return rows

@@ -92,7 +92,8 @@ def run() -> list:
             rows.append(("scrub/runtime/scrubbed_blocks",
                          float(s["scrubbed_blocks"]),
                          f"corrupt_found={s['corrupt_found']}_"
-                         f"repaired={s['repaired_copies']}"))
+                         f"repaired={s['repaired_copies']}_"
+                         f"backoffs={s['scrub_backoffs']}"))
         rows.append((f"scrub/foreground_write_{mode}/"
                      f"{N_FILES}x{FILE_KB}KB",
                      t / N_FILES * 1e6, derived))

@@ -323,6 +323,23 @@ class MetadataManager:
         with self._lock:
             return len(self.files.get(path, ()))
 
+    def stat_file(self, path: str,
+                  version: int = -1) -> Optional[Dict[str, int]]:
+        """File metadata for the gateway's STAT op under one lock:
+        version count, the addressed version's byte length and block
+        count.  None when the path (or version) does not exist."""
+        with self._lock:
+            versions = self.files.get(path)
+            if not versions:
+                return None
+            try:
+                fv = versions[version]
+            except IndexError:
+                return None
+            return {"versions": len(versions),
+                    "total_len": fv.total_len,
+                    "blocks": len(fv.blocks)}
+
     def list_files(self) -> List[str]:
         with self._lock:
             return sorted(self.files)
@@ -369,6 +386,15 @@ class MetadataManager:
         """cb(digest, node_id, remaining_locations) on quarantine."""
         with self._lock:
             self._quarantine_listeners.append(cb)
+
+    def remove_quarantine_listener(self, cb: Callable):
+        """Unsubscribe (no-op if absent) — closed SAIs/runtimes must
+        not leak into a long-lived manager's listener list."""
+        with self._lock:
+            try:
+                self._quarantine_listeners.remove(cb)
+            except ValueError:
+                pass
 
     # -- failure handling ----------------------------------------------------
     def handle_node_failure(self, node_id: int) -> int:

@@ -60,6 +60,7 @@ Job normal forms
 """
 from __future__ import annotations
 
+import atexit
 import collections
 import queue
 import threading
@@ -73,40 +74,43 @@ import numpy as np
 from repro.kernels import ops
 
 
+LANES = ("fg", "batch", "scrub")       # dequeue priority, highest first
+
+
 class LaneQueue:
-    """Two-priority job queue: the foreground lane always dequeues before
-    the low-priority lane (background scrub/repair traffic from the node
-    runtime), and shutdown sentinels (``None``) dequeue only once both
-    lanes are empty — so ``shutdown()`` still drains queued background
-    jobs instead of orphaning their waiters.  API mirrors the subset of
-    ``queue.Queue`` the managers use (put/get/get_nowait)."""
+    """Priority job queue: lanes dequeue strictly in ``LANES`` order —
+    interactive foreground traffic first, then ``batch`` (throughput
+    tenants behind the storage gateway), then ``scrub`` (background
+    scrub/repair traffic from the node runtime) — and shutdown sentinels
+    (``None``) dequeue only once every lane is empty, so ``shutdown()``
+    still drains queued background jobs instead of orphaning their
+    waiters.  API mirrors the subset of ``queue.Queue`` the managers use
+    (put/get/get_nowait)."""
 
     def __init__(self):
         self._cv = threading.Condition()
-        self._fg: collections.deque = collections.deque()
-        self._bg: collections.deque = collections.deque()
+        self._lanes: Dict[str, collections.deque] = \
+            {lane: collections.deque() for lane in LANES}
         self._sentinels = 0
 
     def put(self, item, lane: str = "fg"):
         with self._cv:
             if item is None:
                 self._sentinels += 1
-            elif lane == "fg":
-                self._fg.append(item)
             else:
-                self._bg.append(item)
+                self._lanes[lane].append(item)
             self._cv.notify()
 
     def _pop_locked(self):
-        if self._fg:
-            return self._fg.popleft()
-        if self._bg:
-            return self._bg.popleft()
+        for lane in LANES:
+            if self._lanes[lane]:
+                return self._lanes[lane].popleft()
         self._sentinels -= 1            # caller checked _sentinels > 0
         return None
 
     def _nonempty(self) -> bool:
-        return bool(self._fg or self._bg or self._sentinels)
+        return bool(self._sentinels
+                    or any(self._lanes[lane] for lane in LANES))
 
     def get(self, timeout: Optional[float] = None):
         with self._cv:
@@ -120,9 +124,16 @@ class LaneQueue:
                 raise queue.Empty
             return self._pop_locked()
 
-    def qsize(self) -> int:
+    def depth(self, lane: Optional[str] = None) -> int:
+        """Queued jobs in one lane (or all lanes) — the load signal the
+        node runtime's scrub backoff and the gateway stats read."""
         with self._cv:
-            return len(self._fg) + len(self._bg)
+            if lane is None:
+                return sum(len(q) for q in self._lanes.values())
+            return len(self._lanes[lane])
+
+    def qsize(self) -> int:
+        return self.depth()
 
 
 @dataclass(eq=False)                   # identity semantics: jobs hold
@@ -141,9 +152,10 @@ class Job:                             # numpy fields, and the manager's
     lens: Optional[np.ndarray] = None
     # jobs with equal fuse keys may share one kernel launch
     fuse_key: tuple = ()
-    # 'fg' = foreground client traffic; 'scrub' = low-priority background
-    # traffic (node-runtime scrub/repair) that yields to foreground jobs
-    # at the queue and is tracked by the scrub_* stats counters
+    # 'fg' = interactive client traffic; 'batch' = throughput traffic
+    # (gateway batch-QoS tenants) that yields to interactive jobs;
+    # 'scrub' = lowest-priority background traffic (node-runtime
+    # scrub/repair) tracked by the scrub_* stats counters
     lane: str = "fg"
     # pow2-padded staging shape, used to bound fused-batch memory:
     # the fused matrix is (sum n_rows) x (max staged_width) bytes
@@ -208,12 +220,15 @@ class CrystalTPU:
                          for writers that don't exist; raise it for
                          bursty many-writer workloads.
 
-    Priority lanes: ``submit(..., lane='scrub')`` queues the job on a
-    low-priority lane that managers only drain when no foreground job is
-    waiting — background integrity scrubbing and repair verification
-    (repro.core.noderuntime) share the engine without delaying client
-    writes/reads.  Scrub-lane traffic is tracked by the ``scrub_jobs`` /
-    ``scrub_launches`` / ``scrub_coalesced`` counters.
+    Priority lanes (``LANES`` order): ``lane='batch'`` queues behind
+    every interactive ``fg`` job (the gateway's throughput QoS class),
+    and ``lane='scrub'`` queues behind both — background integrity
+    scrubbing and repair verification (repro.core.noderuntime) share
+    the engine without delaying client writes/reads.  Scrub-lane
+    traffic is tracked by the ``scrub_jobs`` / ``scrub_launches`` /
+    ``scrub_coalesced`` counters; ``queue_depth(lane)`` exposes the
+    per-lane backlog (the node runtime's load-aware scrub backoff and
+    the gateway's stats read it).
     """
 
     def __init__(self, devices=None, buffer_reuse: bool = True,
@@ -247,6 +262,7 @@ class CrystalTPU:
                              daemon=True, name=f"crystal-mgr-{i}")
             for i, d in enumerate(self.devices)]
         self._alive = True
+        self._shutdown_started = False
         for t in self._managers:
             t.start()
 
@@ -255,14 +271,15 @@ class CrystalTPU:
     # ------------------------------------------------------------------
     def submit(self, kind: str, data: np.ndarray, meta=None,
                callback=None, lane: str = "fg") -> Job:
-        """Submit one hashing job.  ``lane='scrub'`` marks background
-        node-runtime traffic: it queues behind every foreground job
-        (foreground keeps engine priority) and is tracked by the
-        ``scrub_*`` stats counters, but fuses with any same-fuse-key
-        job once a manager picks it up."""
+        """Submit one hashing job.  ``lane='batch'`` queues behind
+        interactive ``fg`` traffic (the gateway's throughput QoS);
+        ``lane='scrub'`` marks background node-runtime traffic that
+        queues behind both and is tracked by the ``scrub_*`` stats
+        counters.  Any lane's job fuses with any same-fuse-key job once
+        a manager picks it up."""
         if not self._alive:
             raise RuntimeError("CrystalTPU engine is shut down")
-        if lane not in ("fg", "scrub"):
+        if lane not in LANES:
             raise ValueError(f"unknown lane {lane!r}")
         job = Job(kind=kind, data=np.asarray(data), meta=meta or {},
                   callback=callback, lane=lane)
@@ -302,8 +319,23 @@ class CrystalTPU:
         with self._lock:
             return dict(self.stats)
 
+    def queue_depth(self, lane: Optional[str] = None) -> int:
+        """Jobs queued (not yet picked up by a manager) in ``lane``, or
+        in every lane when ``lane`` is None."""
+        return self.outstanding.depth(lane)
+
     def shutdown(self):
-        self._alive = False
+        """Stop the managers after the queue drains.  Idempotent: only
+        the first call posts shutdown sentinels and joins — repeat calls
+        (interpreter-exit atexit hook racing an explicit shutdown, a
+        gateway closing over an already-stopped engine) return at once
+        instead of double-posting sentinels."""
+        with self._lock:
+            first = not self._shutdown_started
+            self._shutdown_started = True
+            self._alive = False
+        if not first:
+            return
         for _ in self._managers:
             self.outstanding.put(None)
         for t in self._managers:
@@ -477,7 +509,7 @@ class CrystalTPU:
             j.timings = dict(timings)       # batch-wide stage times
             r += n
         self._account(len(batch), int(np.sum(lens)),
-                      sum(j.lane != "fg" for j in batch))
+                      sum(j.lane == "scrub" for j in batch))
 
     # -- fused streaming batch (sliding / gear) ------------------------
     def _execute_stream_batch(self, device, slot: dict, batch: List[Job]):
@@ -530,7 +562,7 @@ class CrystalTPU:
         for j in batch:
             j.timings = dict(timings)       # batch-wide stage times
         self._account(len(batch), int(sum(lens)),
-                      sum(j.lane != "fg" for j in batch))
+                      sum(j.lane == "scrub" for j in batch))
 
 
 # ----------------------------------------------------------------------
@@ -539,13 +571,29 @@ class CrystalTPU:
 # ----------------------------------------------------------------------
 _DEFAULT: Optional[CrystalTPU] = None
 _DEFAULT_LOCK = threading.Lock()
+_ATEXIT_REGISTERED = False
+
+
+def _shutdown_default_engine():
+    """atexit hook: interpreter exit must never race live manager
+    threads (daemon threads dying mid-launch while jax tears down)."""
+    global _DEFAULT
+    with _DEFAULT_LOCK:
+        eng, _DEFAULT = _DEFAULT, None
+    if eng is not None:
+        eng.shutdown()                 # idempotent: explicit shutdowns ok
 
 
 def default_engine() -> CrystalTPU:
     """The process-wide shared offload engine (created on first use,
-    recreated if a previous default was shut down)."""
-    global _DEFAULT
+    recreated if a previous default was shut down).  The first creation
+    registers an ``atexit`` shutdown hook so engines left running at
+    interpreter exit are drained and joined cleanly."""
+    global _DEFAULT, _ATEXIT_REGISTERED
     with _DEFAULT_LOCK:
         if _DEFAULT is None or not _DEFAULT._alive:
+            if not _ATEXIT_REGISTERED:
+                atexit.register(_shutdown_default_engine)
+                _ATEXIT_REGISTERED = True
             _DEFAULT = CrystalTPU()
         return _DEFAULT

@@ -50,6 +50,35 @@ def merkle_proof(leaves: List[bytes], index: int) -> List[Tuple[bool, bytes]]:
     return proof
 
 
+def merkle_proofs(leaves: List[bytes],
+                  indices: List[int]) -> dict:
+    """Membership proofs for several leaves from ONE tree build —
+    {index: proof} with each proof identical to ``merkle_proof(leaves,
+    index)``.  A ranged read covering k of n blocks pays O(n + k log n)
+    instead of k full O(n) rebuilds."""
+    levels = [[_h(b"leaf" + l) for l in leaves]]
+    while len(levels[-1]) > 1:
+        cur = levels[-1]
+        nxt = []
+        for i in range(0, len(cur), 2):
+            a = cur[i]
+            b = cur[i + 1] if i + 1 < len(cur) else a
+            nxt.append(_h(b"node" + a + b))
+        levels.append(nxt)
+    out = {}
+    for index in indices:
+        proof = []
+        idx = index
+        for level in levels[:-1]:
+            sib = idx ^ 1
+            if sib >= len(level):
+                sib = idx
+            proof.append((sib > idx, level[sib]))
+            idx //= 2
+        out[index] = proof
+    return out
+
+
 def merkle_verify(leaf: bytes, index: int, proof: List[Tuple[bool, bytes]],
                   root: bytes) -> bool:
     cur = _h(b"leaf" + leaf)

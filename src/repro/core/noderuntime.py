@@ -32,7 +32,12 @@ on the engine's ``lane='scrub'`` low-priority lane — managers only drain
 it when no foreground job is queued — and the background loops pace
 their batch submissions (``scrub_interval_s``), so client write/read
 traffic keeps engine priority while scrub bursts still coalesce into
-fused launches (``scrub_launches < scrub_jobs``).  The
+fused launches (``scrub_launches < scrub_jobs``).  Scrubbing is also
+*load-aware*: before each burst the runtime checks the engine's
+foreground queue depth and backs off (``scrub_backoff_depth`` /
+``scrub_backoff_s``, counted by ``scrub_backoffs``) while client
+traffic is backlogged, abandoning the sweep until the next cycle when
+the pressure persists.  The
 ``benchmarks/scrub_interference.py`` run measures exactly this:
 foreground write latency with and without a scrubbing runtime.
 
@@ -65,6 +70,10 @@ class NodeRuntimeConfig:
     merkle_every_n: int = 4           # merkle spot-check every N
     #                                   maintenance cycles (0 = off)
     merkle_samples: int = 1           # sampled blocks per spot-check
+    scrub_backoff_depth: int = 4      # pause scrubbing while the
+    #                                   engine's foreground (fg+batch)
+    #                                   queue is deeper than this (0=off)
+    scrub_backoff_s: float = 0.02     # wait before re-checking the load
     underrep_scan_every_n: int = 16   # under-replication registry scan
     #                                   every N maintenance cycles (0=off)
     gc_full_scan_every_n: int = 64    # full-registry GC sweep every N
@@ -96,6 +105,9 @@ class NodeRuntime:
         for k in range(0, len(digests), cfg.scrub_batch_blocks):
             if not cl._gate():
                 break
+            if not cl._load_gate():
+                break                      # foreground busy: yield the
+                #                            sweep, resume next cycle
             batch = []
             for d in digests[k:k + cfg.scrub_batch_blocks]:
                 if d.startswith(b"raw!"):      # no content hash (ca=none)
@@ -156,6 +168,7 @@ class ClusterRuntime:
             "repairs_enqueued": 0, "repaired_copies": 0,
             "repair_lost": 0, "gc_collected": 0,
             "merkle_checks": 0, "merkle_failures": 0,
+            "scrub_backoffs": 0,
         }
         manager.add_quarantine_listener(self._on_quarantine)
         manager.add_retire_listener(self._on_retire)
@@ -180,6 +193,29 @@ class ClusterRuntime:
             if self._resume.wait(timeout=0.05):
                 return True
         return False
+
+    def _foreground_depth(self) -> int:
+        """Client-facing backlog queued at the engine (fg + batch lanes;
+        the scrub lane's own backlog doesn't count against itself)."""
+        eng = self.engine
+        return eng.queue_depth("fg") + eng.queue_depth("batch")
+
+    def _load_gate(self) -> bool:
+        """Load-aware scrub backoff (ROADMAP open item): when the
+        engine's foreground queue is deeper than
+        ``scrub_backoff_depth``, wait ``scrub_backoff_s`` once and
+        re-check; if the backlog persists, tell the caller to abandon
+        the current sweep (it resumes on the next scrub cycle).  Every
+        deferred burst bumps the ``scrub_backoffs`` counter — the proof
+        the mechanism triggered.  True = proceed with the burst."""
+        cfg = self.cfg
+        if not cfg.scrub_backoff_depth:
+            return True
+        if self._foreground_depth() <= cfg.scrub_backoff_depth:
+            return True
+        self._bump(scrub_backoffs=1)
+        self._stop.wait(cfg.scrub_backoff_s)
+        return self._foreground_depth() <= cfg.scrub_backoff_depth
 
     def _digest_of(self, data: bytes) -> bytes:
         """Canonical block digest via a scrub-lane engine submission."""

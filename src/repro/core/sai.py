@@ -33,6 +33,11 @@ assemble as staged pipeline threads with replica failover retained:
 verify of read i overlaps fetch of read i+1, and concurrent readers'
 verify requests coalesce across SAIs through the shared engine.
 
+``read_range(path, offset, length)`` is the Merkle-proof partial read:
+only the covering blocks are fetched, and each is verified against the
+version's stored ``merkle_root`` via ``integrity.merkle_proof`` instead
+of re-reading (or re-hashing) the whole version.
+
 A verify failure no longer kills the read outright: the corrupt copy is
 reported to the metadata manager as a quarantine hint (feeding the node
 runtime's repair pipeline, repro.core.noderuntime) and the block is
@@ -64,6 +69,7 @@ import numpy as np
 
 from repro.core import chunking
 from repro.core import crystal as crystal_mod
+from repro.core import integrity
 from repro.core.castore import BlockMeta, MetadataManager, NodeFailure
 from repro.core.crystal import CrystalTPU
 
@@ -82,6 +88,10 @@ class SAIConfig:
     store_lanes: int = 4              # parallel per-path commit lanes
     read_cache_bytes: int = 0         # block-level LRU read cache budget
     #                                   (0 = off); hits skip fetch+verify
+    lane: str = "fg"                  # engine priority lane for every
+    #                                   hash submission: 'fg' | 'batch' |
+    #                                   'scrub' (gateway QoS classes map
+    #                                   tenants onto these)
 
 
 @dataclass
@@ -192,7 +202,16 @@ class SAI:
         self._cache_lock = threading.Lock()
         self.read_stats: Dict[str, int] = {"cache_hits": 0,
                                            "cache_misses": 0,
-                                           "refetches": 0}
+                                           "refetches": 0,
+                                           "cache_invalidations": 0}
+        # a quarantine anywhere in a digest's replica set condemns the
+        # cached copy too: the entry was verified at insertion, but its
+        # provenance is now suspect, so the next read must re-fetch and
+        # re-verify against the surviving replicas instead of serving
+        # it.  Registered lazily on first cache use and removed by
+        # close(), so closed SAIs don't leak into a long-lived
+        # manager's listener list.
+        self._cache_listener_on = False
         self._pipe_lock = threading.Lock()
         self._chunk_q: Optional[queue.Queue] = None
         self._store_qs: Optional[List[queue.Queue]] = None
@@ -225,7 +244,7 @@ class SAI:
                                         for c in chunks])
         rows, lens = self._pack_chunks(chunks)
         return _HashHandle(job=self.engine.submit(
-            "direct", rows, {"lens": lens}))
+            "direct", rows, {"lens": lens}, lane=self.cfg.lane))
 
     def _hash_chunks(self, chunks: List[bytes]) -> List[bytes]:
         return self._submit_hash(chunks).wait()
@@ -242,7 +261,8 @@ class SAI:
             if cfg.hasher == "tpu":
                 job = self.engine.submit(
                     "sliding", np.frombuffer(data, np.uint8),
-                    {"window": cfg.window, "stride": cfg.stride})
+                    {"window": cfg.window, "stride": cfg.stride},
+                    lane=cfg.lane)
                 hashes = job.wait()
             else:
                 hashes = _cpu_sliding(data, cfg.window, cfg.stride)
@@ -253,7 +273,8 @@ class SAI:
         if cfg.ca == "cdc-gear":
             if cfg.hasher == "tpu":
                 job = self.engine.submit(
-                    "gear", np.frombuffer(data, np.uint8), {})
+                    "gear", np.frombuffer(data, np.uint8), {},
+                    lane=cfg.lane)
                 hashes = job.wait()
             else:
                 hashes = _cpu_gear(data)
@@ -436,6 +457,12 @@ class SAI:
             fetch_q.put(None)        # fetch worker forwards to verify
         for t in threads:
             t.join(timeout=60)
+        with self._cache_lock:
+            listener_on = self._cache_listener_on
+            self._cache_listener_on = False
+        if listener_on:              # don't leak into the manager's
+            self.manager.remove_quarantine_listener(  # listener list
+                self._on_quarantine_evict)
 
     def _ensure_pipeline(self):
         # caller holds _pipe_lock
@@ -514,9 +541,19 @@ class SAI:
     # read path
     # ------------------------------------------------------------------
     # -- block-level LRU read cache (digest -> verified bytes) ---------
+    def _ensure_cache_listener(self):
+        if self.cfg.read_cache_bytes <= 0:
+            return
+        with self._cache_lock:
+            if self._cache_listener_on:
+                return
+            self._cache_listener_on = True
+        self.manager.add_quarantine_listener(self._on_quarantine_evict)
+
     def _cache_get(self, digest: bytes) -> Optional[bytes]:
         if self.cfg.read_cache_bytes <= 0:
             return None
+        self._ensure_cache_listener()
         with self._cache_lock:
             data = self._cache.get(digest)
             if data is None:
@@ -526,10 +563,19 @@ class SAI:
             self.read_stats["cache_hits"] += 1
             return data
 
+    def _on_quarantine_evict(self, digest: bytes, node_id: int,
+                             remaining):
+        with self._cache_lock:
+            data = self._cache.pop(digest, None)
+            if data is not None:
+                self._cache_used -= len(data)
+                self.read_stats["cache_invalidations"] += 1
+
     def _cache_put(self, digest: bytes, data: bytes):
         cap = self.cfg.read_cache_bytes
         if cap <= 0 or len(data) > cap:
             return
+        self._ensure_cache_listener()
         with self._cache_lock:
             if digest in self._cache:
                 self._cache.move_to_end(digest)
@@ -677,6 +723,71 @@ class SAI:
             self._finish_verify(fv.blocks, datas, srcs, handles, idxs,
                                 locmap)
         return b"".join(datas)[:fv.total_len]
+
+    def read_range(self, path: str, offset: int, length: int,
+                   version: int = -1, verify: bool = True) -> bytes:
+        """Merkle-proof partial read: fetch ONLY the blocks covering
+        ``[offset, offset+length)`` and verify each against the stored
+        file-level ``FileVersion.merkle_root`` via a membership proof
+        (``integrity.merkle_proof``) — no other block of the version is
+        ever fetched or hashed.  The proof path is built from the
+        block-map's leaf digests and anchored at the committed root, so
+        a partial read detects both corrupt block bytes (recomputed
+        digest breaks the proof; speculative re-fetch from the next
+        replica, as in full reads) and a tampered block-map entry (the
+        stored digest itself fails the proof => IOError).  The range is
+        clamped to the file length; ``raw!`` blocks (ca='none') carry no
+        content hash and are served unverified, as in full reads."""
+        if offset < 0 or length < 0:
+            raise ValueError("offset and length must be non-negative")
+        fv, locmap = self.manager.get_read_plan(path, version)
+        if fv is None:
+            raise FileNotFoundError(path)
+        end = min(offset + length, fv.total_len)
+        if offset >= fv.total_len or end <= offset:
+            return b""
+        first = None
+        start0 = pos = 0
+        cover: List[BlockMeta] = []
+        for i, b in enumerate(fv.blocks):
+            if pos + b.length > offset and pos < end:
+                if first is None:
+                    first, start0 = i, pos
+                cover.append(b)
+            pos += b.length
+            if pos >= end:
+                break
+        datas, srcs = self._fetch_blocks(cover, locmap)
+        if verify:
+            handles, idxs = self._submit_verify(cover, datas, srcs)
+            recomputed = dict(zip(idxs, self._gather_digests(handles)))
+            leaves = [b.digest for b in fv.blocks]
+            # every non-raw covering block is proof-checked — including
+            # read-cache hits (their bytes were digest-verified at
+            # insertion; the proof still anchors the digest to the
+            # root, so a tampered block-map is caught warm or cold) —
+            # and the tree is built ONCE for the whole range
+            check = [k for k, b in enumerate(cover)
+                     if not b.digest.startswith(b"raw!")]
+            proofs = integrity.merkle_proofs(
+                leaves, [first + k for k in check])
+            for k in check:
+                digest = recomputed.get(k)
+                if digest is not None and digest != cover[k].digest:
+                    # corrupt fetched copy: quarantine + next replica
+                    # (the refetch re-verifies the content hash, so
+                    # bytes match the stored digest from here on)
+                    self._refetch_block(cover[k], k, datas, srcs, locmap)
+                gi = first + k
+                if not integrity.merkle_verify(cover[k].digest, gi,
+                                               proofs[gi],
+                                               fv.merkle_root):
+                    raise IOError(
+                        f"merkle proof failed for block {gi} of {path}")
+            for k in idxs:
+                self._cache_put(cover[k].digest, datas[k])
+        buf = b"".join(datas)
+        return buf[offset - start0:end - start0]
 
     def read_async(self, path: str, version: int = -1,
                    verify: bool = True) -> ReadFuture:

@@ -1,1 +1,5 @@
 from repro.serve.servestep import make_prefill_step, make_decode_step  # noqa: F401
+from repro.serve.storage_service import (GatewayConfig,  # noqa: F401
+                                         StorageGateway)
+from repro.serve.storage_client import (GatewayClient,  # noqa: F401
+                                        GatewayError, RetryLater)

@@ -1,0 +1,145 @@
+"""Thin framed client for the multi-tenant storage gateway.
+
+Everything the client exchanges with the gateway is a codec frame
+(bytes) pushed through a transport channel, so swapping the in-process
+channel for a socket later changes nothing here.  Backpressure is a
+first-class outcome: an over-budget tenant's request resolves to
+:class:`RetryLater` (the gateway's admission control answering
+``ST_RETRY``) rather than queueing without bound — callers either back
+off themselves or use :meth:`GatewayClient.write_retrying`.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from typing import Any, Dict, Optional
+
+from repro.serve.storage_service import (OP_CLOSE, OP_DELETE, OP_OPEN,
+                                         OP_READ, OP_STAT, OP_WRITE,
+                                         ST_ERROR, ST_OK, ST_RETRY,
+                                         decode_response, encode_request)
+
+
+class RetryLater(RuntimeError):
+    """Admission control pushed back: the tenant is over its in-flight
+    or queued-byte budget.  Back off and resubmit."""
+
+
+class GatewayError(RuntimeError):
+    """A gateway-side failure that does not map to a builtin."""
+
+
+_ERROR_TYPES = {
+    "FileNotFoundError": FileNotFoundError,
+    "IOError": IOError,
+    "OSError": OSError,
+    "TimeoutError": TimeoutError,
+    "ValueError": ValueError,
+    "KeyError": KeyError,
+}
+
+
+def _raise_for(fields: Dict[str, Any]):
+    exc = _ERROR_TYPES.get(fields["errtype"])
+    if exc is not None:
+        raise exc(fields["msg"])
+    raise GatewayError(f"{fields['errtype']}: {fields['msg']}")
+
+
+class PendingReply:
+    """Handle for an in-flight gateway request; ``result()`` decodes the
+    response frame and raises :class:`RetryLater` on backpressure or the
+    mapped exception on gateway-side errors."""
+
+    def __init__(self, future, op: int):
+        self._future = future
+        self._op = op
+
+    def done(self) -> bool:
+        return self._future.done()
+
+    def result(self, timeout: Optional[float] = 120.0):
+        status, op, _rid, fields = decode_response(
+            self._future.result(timeout))
+        if status == ST_RETRY:
+            raise RetryLater(fields["reason"])
+        if status == ST_ERROR:
+            _raise_for(fields)
+        assert status == ST_OK
+        if op == OP_READ:
+            return fields["data"]
+        return fields
+
+
+class GatewayClient:
+    """One client session against a :class:`StorageGateway`.
+
+    ``tenant`` names the fair-share/admission bucket this session bills
+    to; ``weight`` and ``qos`` ('interactive' | 'batch' | 'scrub') apply
+    when this open creates the tenant (later sessions join it as-is).
+    ``submit_*`` methods are asynchronous (returning
+    :class:`PendingReply`); the plain verbs block on the reply.
+    """
+
+    def __init__(self, gateway, tenant: str, weight: float = 1.0,
+                 qos: str = "interactive"):
+        self._channel = gateway.connect()
+        self._rid = itertools.count(1)
+        self.tenant = tenant
+        resp = self._rpc(OP_OPEN, session=0, tenant=tenant,
+                         weight=weight, qos=qos).result()
+        self._session = resp["session"]
+
+    # -- framing -------------------------------------------------------
+    def _rpc(self, op: int, session: Optional[int] = None,
+             **fields: Any) -> PendingReply:
+        if session is None:
+            session = self._session
+        frame = encode_request(op, session, next(self._rid), **fields)
+        return PendingReply(self._channel.request(frame), op)
+
+    # -- async submission ----------------------------------------------
+    def submit_write(self, path: str, data: bytes) -> PendingReply:
+        return self._rpc(OP_WRITE, path=path, data=bytes(data))
+
+    def submit_read(self, path: str, version: int = -1,
+                    verify: bool = True) -> PendingReply:
+        return self._rpc(OP_READ, path=path, version=version,
+                         verify=verify)
+
+    # -- blocking verbs ------------------------------------------------
+    def write(self, path: str, data: bytes,
+              timeout: Optional[float] = 120.0) -> Dict[str, int]:
+        """Store ``data`` at ``path``; returns the gateway's write
+        summary (total/new bytes, new/dup blocks).  Raises
+        :class:`RetryLater` on admission backpressure."""
+        return self.submit_write(path, data).result(timeout)
+
+    def write_retrying(self, path: str, data: bytes,
+                       timeout: float = 120.0,
+                       backoff_s: float = 0.002) -> Dict[str, int]:
+        """``write`` that absorbs :class:`RetryLater` with a small
+        backoff until ``timeout`` — the well-behaved flooder."""
+        deadline = time.monotonic() + timeout
+        while True:
+            try:
+                return self.write(path, data, timeout=timeout)
+            except RetryLater:
+                if time.monotonic() >= deadline:
+                    raise
+                time.sleep(backoff_s)
+
+    def read(self, path: str, version: int = -1, verify: bool = True,
+             timeout: Optional[float] = 120.0) -> bytes:
+        return self.submit_read(path, version, verify).result(timeout)
+
+    def stat(self, path: str) -> Dict[str, int]:
+        """{'versions', 'total_len', 'blocks'} for the latest version."""
+        return self._rpc(OP_STAT, path=path).result()
+
+    def delete(self, path: str) -> int:
+        """Delete every version of ``path``; returns orphaned digests."""
+        return self._rpc(OP_DELETE, path=path).result()["orphans"]
+
+    def close(self):
+        self._rpc(OP_CLOSE).result()

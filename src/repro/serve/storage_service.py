@@ -1,0 +1,689 @@
+"""Multi-tenant storage gateway: the serving front end for the store.
+
+The paper evaluates its GPU-offloaded storage prototype under competing
+concurrent applications (§V, Figures 12-17) and argues the offload layer
+can be shared transparently.  This module is the serving subsystem that
+makes that sharing real for *many clients of the storage system itself*:
+instead of every client owning an :class:`repro.core.sai.SAI`, clients
+open sessions against one :class:`StorageGateway` and submit framed
+``write`` / ``read`` / ``delete`` / ``stat`` requests.
+
+Layering:
+
+  wire codec        — every request/response crosses the transport as a
+                      framed byte string (``encode_request`` /
+                      ``decode_response`` ...).  The bundled transport is
+                      in-process (``GatewayChannel.request(frame) ->
+                      ReplyFuture``), but the contract is exactly what a
+                      socket transport would implement, so one is a
+                      drop-in follow-up.
+  admission control — per-tenant outstanding-request and queued-byte
+                      budgets.  Over budget => an ``ST_RETRY`` response
+                      (client-side :class:`~repro.serve.storage_client.
+                      RetryLater`) instead of unbounded queueing: a
+                      flooding tenant gets backpressure, not a growing
+                      queue.
+  fair-share        — weighted deficit round-robin over per-tenant
+    scheduler         queues: each round a tenant's deficit grows by
+                      ``quantum_bytes * weight`` and it may dispatch
+                      requests whose byte cost fits the deficit, so
+                      equal-weight tenants get equal *bytes* of service
+                      regardless of how unequal their offered load is.
+                      ``max_inflight`` bounds per-tenant dispatched
+                      concurrency so the scheduler — not arrival order —
+                      decides who runs next.
+  cross-client      — every tenant's SAI shares the gateway's offload
+    coalescing        engine, so hash requests from *different clients*
+                      fuse into common batch launches.  The signature is
+                      ``engine launches < total client requests`` for a
+                      concurrent burst (``snapshot_stats()['launches'] <
+                      ...['jobs']``) — the ROADMAP's "cross-process
+                      (serve-side) coalescing" open item.
+  QoS classes       — ``interactive`` / ``batch`` / ``scrub`` map onto
+                      the engine's priority lanes (``fg`` > ``batch`` >
+                      ``scrub``), so a batch tenant's hashing yields to
+                      interactive tenants at the device queue too.
+  gateway-owned     — ``GatewayConfig(scrub=True)`` makes the gateway
+    cluster runtime   own a :class:`repro.core.noderuntime.
+                      ClusterRuntime` (integrity scrubbing, repair, GC)
+                      on the same engine, started and stopped with the
+                      gateway.
+
+``snapshot_stats()`` publishes per-tenant throughput/queue/rejection
+counters plus the engine's fused-launch counters; the
+``benchmarks/gateway_saturation.py`` run consumes it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import struct
+import threading
+import time
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+from repro.core import crystal as crystal_mod
+from repro.core.castore import MetadataManager
+from repro.core.crystal import CrystalTPU
+from repro.core.noderuntime import ClusterRuntime, NodeRuntimeConfig
+from repro.core.sai import SAI, SAIConfig
+
+# ----------------------------------------------------------------------
+# wire-format codec: framed requests/responses (transport-independent)
+# ----------------------------------------------------------------------
+OP_OPEN, OP_WRITE, OP_READ, OP_DELETE, OP_STAT, OP_CLOSE = range(6)
+ST_OK, ST_RETRY, ST_ERROR = range(3)
+
+OP_NAMES = {OP_OPEN: "open", OP_WRITE: "write", OP_READ: "read",
+            OP_DELETE: "delete", OP_STAT: "stat", OP_CLOSE: "close"}
+
+# QoS class -> engine priority lane (repro.core.crystal.LANES order)
+QOS_LANES = {"interactive": "fg", "batch": "batch", "scrub": "scrub"}
+
+_REQ_HDR = struct.Struct("!BIQ")       # op, session, rid
+_RSP_HDR = struct.Struct("!BBQ")       # status, op, rid
+_U16 = struct.Struct("!H")
+_U32 = struct.Struct("!I")
+_I32 = struct.Struct("!i")
+_U64 = struct.Struct("!Q")
+_F64 = struct.Struct("!d")
+
+
+class CodecError(ValueError):
+    pass
+
+
+def _pack_str(s: str) -> bytes:
+    b = s.encode("utf-8")
+    if len(b) > 0xFFFF:
+        raise CodecError("string field too long")
+    return _U16.pack(len(b)) + b
+
+
+def _take(buf: bytes, off: int, st: struct.Struct):
+    if off + st.size > len(buf):
+        raise CodecError("truncated frame")
+    return st.unpack_from(buf, off), off + st.size
+
+
+def _take_str(buf: bytes, off: int) -> Tuple[str, int]:
+    (n,), off = _take(buf, off, _U16)
+    if off + n > len(buf):
+        raise CodecError("truncated string")
+    return buf[off:off + n].decode("utf-8"), off + n
+
+
+def _take_bytes(buf: bytes, off: int) -> Tuple[bytes, int]:
+    (n,), off = _take(buf, off, _U32)
+    if off + n > len(buf):
+        raise CodecError("truncated payload")
+    return bytes(buf[off:off + n]), off + n
+
+
+def encode_request(op: int, session: int, rid: int, **f: Any) -> bytes:
+    head = _REQ_HDR.pack(op, session, rid)
+    if op == OP_OPEN:
+        return head + _pack_str(f["tenant"]) + _pack_str(f["qos"]) \
+            + _F64.pack(float(f.get("weight", 1.0)))
+    if op == OP_WRITE:
+        data = f["data"]
+        return head + _pack_str(f["path"]) + _U32.pack(len(data)) + data
+    if op == OP_READ:
+        return head + _pack_str(f["path"]) \
+            + _I32.pack(int(f.get("version", -1))) \
+            + struct.pack("!B", 1 if f.get("verify", True) else 0)
+    if op in (OP_DELETE, OP_STAT):
+        return head + _pack_str(f["path"])
+    if op == OP_CLOSE:
+        return head
+    raise CodecError(f"unknown opcode {op}")
+
+
+def decode_request(frame: bytes):
+    """-> (op, session, rid, fields)."""
+    (op, session, rid), off = _take(frame, 0, _REQ_HDR)
+    f: Dict[str, Any] = {}
+    if op == OP_OPEN:
+        f["tenant"], off = _take_str(frame, off)
+        f["qos"], off = _take_str(frame, off)
+        (f["weight"],), off = _take(frame, off, _F64)
+    elif op == OP_WRITE:
+        f["path"], off = _take_str(frame, off)
+        f["data"], off = _take_bytes(frame, off)
+    elif op == OP_READ:
+        f["path"], off = _take_str(frame, off)
+        (f["version"],), off = _take(frame, off, _I32)
+        (v,), off = _take(frame, off, struct.Struct("!B"))
+        f["verify"] = bool(v)
+    elif op in (OP_DELETE, OP_STAT):
+        f["path"], off = _take_str(frame, off)
+    elif op == OP_CLOSE:
+        pass
+    else:
+        raise CodecError(f"unknown opcode {op}")
+    if off != len(frame):
+        raise CodecError("trailing bytes in request frame")
+    return op, session, rid, f
+
+
+def encode_response(status: int, op: int, rid: int, **f: Any) -> bytes:
+    head = _RSP_HDR.pack(status, op, rid)
+    if status == ST_RETRY:
+        return head + _pack_str(f.get("reason", "over budget"))
+    if status == ST_ERROR:
+        return head + _pack_str(f["errtype"]) + _pack_str(f.get("msg", ""))
+    if op == OP_OPEN:
+        return head + _U32.pack(f["session"])
+    if op == OP_WRITE:
+        return head + _U64.pack(f["total_bytes"]) \
+            + _U64.pack(f["new_bytes"]) + _U32.pack(f["new_blocks"]) \
+            + _U32.pack(f["dup_blocks"])
+    if op == OP_READ:
+        data = f["data"]
+        return head + _U32.pack(len(data)) + data
+    if op == OP_DELETE:
+        return head + _U32.pack(f["orphans"])
+    if op == OP_STAT:
+        return head + _U32.pack(f["versions"]) + _U64.pack(f["total_len"]) \
+            + _U32.pack(f["blocks"])
+    if op == OP_CLOSE:
+        return head
+    raise CodecError(f"unknown opcode {op}")
+
+
+def decode_response(frame: bytes):
+    """-> (status, op, rid, fields)."""
+    (status, op, rid), off = _take(frame, 0, _RSP_HDR)
+    f: Dict[str, Any] = {}
+    if status == ST_RETRY:
+        f["reason"], off = _take_str(frame, off)
+    elif status == ST_ERROR:
+        f["errtype"], off = _take_str(frame, off)
+        f["msg"], off = _take_str(frame, off)
+    elif op == OP_OPEN:
+        (f["session"],), off = _take(frame, off, _U32)
+    elif op == OP_WRITE:
+        (f["total_bytes"],), off = _take(frame, off, _U64)
+        (f["new_bytes"],), off = _take(frame, off, _U64)
+        (f["new_blocks"],), off = _take(frame, off, _U32)
+        (f["dup_blocks"],), off = _take(frame, off, _U32)
+    elif op == OP_READ:
+        f["data"], off = _take_bytes(frame, off)
+    elif op == OP_DELETE:
+        (f["orphans"],), off = _take(frame, off, _U32)
+    elif op == OP_STAT:
+        (f["versions"],), off = _take(frame, off, _U32)
+        (f["total_len"],), off = _take(frame, off, _U64)
+        (f["blocks"],), off = _take(frame, off, _U32)
+    elif op == OP_CLOSE:
+        pass
+    else:
+        raise CodecError(f"unknown opcode {op}")
+    if off != len(frame):
+        raise CodecError("trailing bytes in response frame")
+    return status, op, rid, f
+
+
+# ----------------------------------------------------------------------
+# transport
+# ----------------------------------------------------------------------
+class ReplyFuture:
+    """Resolves to a raw response frame (bytes)."""
+
+    def __init__(self):
+        self._done = threading.Event()
+        self._frame: Optional[bytes] = None
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> bytes:
+        if not self._done.wait(timeout):
+            raise TimeoutError("gateway reply still in flight")
+        return self._frame
+
+    def _resolve(self, frame: bytes):
+        self._frame = frame
+        self._done.set()
+
+
+class GatewayChannel:
+    """In-process client endpoint: ``request`` takes a request frame and
+    returns a :class:`ReplyFuture` resolving to a response frame — the
+    exact contract a socket transport would implement, so the framed
+    codec is exercised end-to-end even in-process."""
+
+    def __init__(self, gateway: "StorageGateway"):
+        self._gateway = gateway
+
+    def request(self, frame: bytes) -> ReplyFuture:
+        return self._gateway.handle_frame(frame)
+
+
+# ----------------------------------------------------------------------
+# gateway
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class GatewayConfig:
+    quantum_bytes: int = 256 << 10    # WDRR service quantum per weight
+    max_inflight: int = 4             # per-tenant dispatched concurrency
+    max_outstanding: int = 32         # per-tenant inflight + queued cap
+    max_queued_bytes: int = 8 << 20   # per-tenant queued byte budget
+    sai: Optional[SAIConfig] = None   # per-tenant SAI template (lane is
+    #                                   overridden by the tenant's QoS)
+    scrub: bool = False               # own + run a ClusterRuntime
+    runtime: Optional[NodeRuntimeConfig] = None
+    idle_poll_s: float = 0.05         # scheduler idle wakeup
+
+
+@dataclasses.dataclass
+class _Work:
+    op: int
+    rid: int
+    fields: Dict[str, Any]
+    cost: int
+    reply: ReplyFuture
+
+
+class _Tenant:
+    def __init__(self, name: str, weight: float, qos: str, sai: SAI):
+        self.name = name
+        self.weight = max(float(weight), 1e-6)
+        self.qos = qos
+        self.sai = sai
+        self.queue: Deque[_Work] = deque()
+        self.queued_bytes = 0
+        self.inflight = 0
+        self.deficit = 0.0
+        self.completion_q: "queue.Queue" = queue.Queue()
+        self.completer: Optional[threading.Thread] = None
+        self.stats: Dict[str, int] = {
+            "submitted": 0, "completed": 0, "rejected": 0, "errors": 0,
+            "bytes_in": 0, "bytes_out": 0,
+        }
+
+
+class StorageGateway:
+    """Fronts one :class:`MetadataManager` + shared offload engine for
+    many concurrent client sessions (see module docstring).
+
+    Sessions are opened by an ``OP_OPEN`` frame naming a tenant, weight,
+    and QoS class; any number of sessions may join the same tenant (its
+    weight/QoS are fixed by the first open).  Each tenant gets its own
+    :class:`SAI` — its ``write_async`` / ``read_async`` pipelines are
+    reused verbatim — but every SAI shares the gateway's engine, which
+    is what fuses different clients' hash bursts into common launches.
+    """
+
+    def __init__(self, manager: MetadataManager,
+                 engine: Optional[CrystalTPU] = None,
+                 config: Optional[GatewayConfig] = None):
+        self.manager = manager
+        self._engine = engine
+        self.cfg = config or GatewayConfig()
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._tenants: Dict[str, _Tenant] = {}
+        self._order: List[_Tenant] = []       # WDRR visit order
+        self._sessions: Dict[int, _Tenant] = {}
+        self._next_session = 1
+        self._rr = 0
+        self._closed = False
+        self._stop = threading.Event()
+        self.stats = {"frames": 0, "dispatched": 0,
+                      "admission_rejections": 0}
+        self.runtime: Optional[ClusterRuntime] = None
+        if self.cfg.scrub:
+            self.runtime = ClusterRuntime(manager, engine=self.engine,
+                                          config=self.cfg.runtime)
+            self.runtime.start()
+        self._scheduler = threading.Thread(target=self._scheduler_loop,
+                                           daemon=True,
+                                           name="gateway-sched")
+        self._scheduler.start()
+
+    # -- plumbing ------------------------------------------------------
+    @property
+    def engine(self) -> CrystalTPU:
+        """The engine every tenant SAI shares.  Resolved to the
+        process-wide default only when none was supplied; a dead engine
+        is NOT silently replaced — existing tenants hold it, and a new
+        one would split coalescing (and stats) across two engines.
+        Submitting to a shut-down engine fails loudly instead."""
+        if self._engine is None:
+            self._engine = crystal_mod.default_engine()
+        return self._engine
+
+    def connect(self) -> GatewayChannel:
+        """Open a transport endpoint (the in-process analog of a TCP
+        connect; sessions are bound by OP_OPEN frames, not channels)."""
+        return GatewayChannel(self)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- frame entry point ---------------------------------------------
+    def handle_frame(self, frame: bytes) -> ReplyFuture:
+        reply = ReplyFuture()
+        try:
+            op, session, rid, f = decode_request(frame)
+        except Exception as e:
+            reply._resolve(encode_response(ST_ERROR, 0, 0,
+                                           errtype="CodecError",
+                                           msg=str(e)))
+            return reply
+        try:
+            self._handle(op, session, rid, f, reply)
+        except BaseException as e:
+            reply._resolve(encode_response(ST_ERROR, op, rid,
+                                           errtype=type(e).__name__,
+                                           msg=str(e)))
+        return reply
+
+    def _handle(self, op: int, session: int, rid: int,
+                f: Dict[str, Any], reply: ReplyFuture):
+        with self._cv:
+            self.stats["frames"] += 1
+        if op == OP_OPEN:
+            return self._open_session(rid, f, reply)
+        with self._cv:
+            tenant = self._sessions.get(session)
+        if tenant is None:
+            reply._resolve(encode_response(
+                ST_ERROR, op, rid, errtype="UnknownSession",
+                msg=f"session {session} is not open"))
+            return
+        if op == OP_CLOSE:
+            with self._cv:
+                self._sessions.pop(session, None)
+            reply._resolve(encode_response(ST_OK, OP_CLOSE, rid))
+            return
+        if op == OP_STAT:
+            return self._stat(tenant, rid, f, reply)
+        if op == OP_DELETE:
+            return self._delete(tenant, rid, f, reply)
+        if op in (OP_WRITE, OP_READ):
+            return self._admit(tenant, op, rid, f, reply)
+        reply._resolve(encode_response(ST_ERROR, op, rid,
+                                       errtype="CodecError",
+                                       msg=f"unhandled opcode {op}"))
+
+    def _open_session(self, rid: int, f: Dict[str, Any],
+                      reply: ReplyFuture):
+        qos = f["qos"]
+        if qos not in QOS_LANES:
+            reply._resolve(encode_response(
+                ST_ERROR, OP_OPEN, rid, errtype="ValueError",
+                msg=f"unknown qos {qos!r}"))
+            return
+        with self._cv:
+            if self._closed:
+                reply._resolve(encode_response(
+                    ST_ERROR, OP_OPEN, rid, errtype="RuntimeError",
+                    msg="gateway is closed"))
+                return
+            tenant = self._tenants.get(f["tenant"])
+            if tenant is None:
+                sai_cfg = dataclasses.replace(
+                    self.cfg.sai or SAIConfig(), lane=QOS_LANES[qos])
+                tenant = _Tenant(f["tenant"], f["weight"], qos,
+                                 SAI(self.manager, sai_cfg,
+                                     crystal=self.engine))
+                tenant.completer = threading.Thread(
+                    target=self._completer_loop, args=(tenant,),
+                    daemon=True, name=f"gateway-done-{tenant.name}")
+                tenant.completer.start()
+                self._tenants[tenant.name] = tenant
+                self._order.append(tenant)
+            sid = self._next_session
+            self._next_session += 1
+            self._sessions[sid] = tenant
+        reply._resolve(encode_response(ST_OK, OP_OPEN, rid, session=sid))
+
+    # -- metadata ops (cheap: served inline, no queueing) --------------
+    def _stat(self, tenant: _Tenant, rid: int, f: Dict[str, Any],
+              reply: ReplyFuture):
+        st = self.manager.stat_file(f["path"])
+        if st is None:
+            reply._resolve(encode_response(
+                ST_ERROR, OP_STAT, rid, errtype="FileNotFoundError",
+                msg=f["path"]))
+            return
+        with self._cv:
+            tenant.stats["submitted"] += 1
+            tenant.stats["completed"] += 1
+        reply._resolve(encode_response(ST_OK, OP_STAT, rid, **st))
+
+    def _delete(self, tenant: _Tenant, rid: int, f: Dict[str, Any],
+                reply: ReplyFuture):
+        orphans = self.manager.delete_file(f["path"])
+        with self._cv:
+            tenant.stats["submitted"] += 1
+            tenant.stats["completed"] += 1
+        reply._resolve(encode_response(ST_OK, OP_DELETE, rid,
+                                       orphans=len(orphans)))
+
+    # -- admission control ---------------------------------------------
+    def _cost_of(self, op: int, f: Dict[str, Any]) -> int:
+        if op == OP_WRITE:
+            return max(len(f["data"]), 1)
+        st = self.manager.stat_file(f["path"], f.get("version", -1))
+        return max(st["total_len"], 1) if st else 1
+
+    def _admit(self, tenant: _Tenant, op: int, rid: int,
+               f: Dict[str, Any], reply: ReplyFuture):
+        cost = self._cost_of(op, f)
+        cfg = self.cfg
+        with self._cv:
+            if self._closed:
+                reply._resolve(encode_response(
+                    ST_RETRY, op, rid, reason="gateway closing"))
+                return
+            outstanding = tenant.inflight + len(tenant.queue)
+            # an oversized request is admissible when the tenant queue
+            # is empty (it can always make progress alone); otherwise
+            # the byte budget bounds queue growth
+            over_bytes = tenant.queue and \
+                tenant.queued_bytes + cost > cfg.max_queued_bytes
+            if outstanding >= cfg.max_outstanding or over_bytes:
+                tenant.stats["rejected"] += 1
+                self.stats["admission_rejections"] += 1
+                reply._resolve(encode_response(
+                    ST_RETRY, op, rid,
+                    reason=f"tenant {tenant.name} over budget "
+                           f"({outstanding} outstanding, "
+                           f"{tenant.queued_bytes} B queued)"))
+                return
+            tenant.queue.append(_Work(op, rid, f, cost, reply))
+            tenant.queued_bytes += cost
+            tenant.stats["submitted"] += 1
+            self._cv.notify_all()
+
+    # -- fair-share scheduler (weighted deficit round-robin) -----------
+    def _eligible_locked(self) -> bool:
+        return any(t.queue and t.inflight < self.cfg.max_inflight
+                   for t in self._order)
+
+    def _drained_locked(self) -> bool:
+        return all(not t.queue and t.inflight == 0 for t in self._order)
+
+    def _pick_locked(self) -> List[Tuple[_Tenant, _Work]]:
+        """One WDRR round: visit every tenant once in rotating order,
+        top its deficit up by ``quantum_bytes * weight``, and dispatch
+        head-of-queue requests while their byte cost fits the deficit
+        (and the tenant's inflight cap allows).  Idle tenants' deficits
+        reset so service credit never accumulates while unused."""
+        cfg = self.cfg
+        picks: List[Tuple[_Tenant, _Work]] = []
+        n = len(self._order)
+        for k in range(n):
+            t = self._order[(self._rr + k) % n]
+            if not t.queue:
+                t.deficit = 0.0
+                continue
+            if t.inflight >= cfg.max_inflight:
+                continue
+            t.deficit += cfg.quantum_bytes * t.weight
+            while (t.queue and t.inflight < cfg.max_inflight
+                   and t.queue[0].cost <= t.deficit):
+                w = t.queue.popleft()
+                t.deficit -= w.cost
+                t.queued_bytes -= w.cost
+                t.inflight += 1
+                picks.append((t, w))
+            if not t.queue:
+                t.deficit = 0.0
+        if n:
+            self._rr = (self._rr + 1) % n
+        self.stats["dispatched"] += len(picks)
+        return picks
+
+    def _scheduler_loop(self):
+        while True:
+            with self._cv:
+                while not self._stop.is_set() \
+                        and not self._eligible_locked():
+                    self._cv.wait(self.cfg.idle_poll_s)
+                if self._stop.is_set() and not self._eligible_locked():
+                    return
+                picks = self._pick_locked()
+            for tenant, work in picks:
+                self._dispatch(tenant, work)
+
+    def _dispatch(self, tenant: _Tenant, work: _Work):
+        try:
+            if work.op == OP_WRITE:
+                fut = tenant.sai.write_async(work.fields["path"],
+                                             work.fields["data"])
+            else:
+                fut = tenant.sai.read_async(work.fields["path"],
+                                            work.fields["version"],
+                                            work.fields["verify"])
+        except BaseException as e:
+            self._finish(tenant, work, encode_response(
+                ST_ERROR, work.op, work.rid, errtype=type(e).__name__,
+                msg=str(e)), error=True)
+            return
+        tenant.completion_q.put((work, fut))
+
+    # -- completion ----------------------------------------------------
+    def _completer_loop(self, tenant: _Tenant):
+        """Per-tenant completion drain: waits dispatch-order futures and
+        frames the responses.  Per-tenant (not gateway-wide) so one
+        tenant's slow read never head-of-line blocks another tenant's
+        finished requests."""
+        while True:
+            item = tenant.completion_q.get()
+            if item is None:
+                return
+            work, fut = item
+            nbytes = {}
+            try:
+                res = fut.result(timeout=600)
+                if work.op == OP_WRITE:
+                    frame = encode_response(
+                        ST_OK, OP_WRITE, work.rid,
+                        total_bytes=res.total_bytes,
+                        new_bytes=res.new_bytes,
+                        new_blocks=res.new_blocks,
+                        dup_blocks=res.dup_blocks)
+                    nbytes["bytes_in"] = res.total_bytes
+                else:
+                    frame = encode_response(ST_OK, OP_READ, work.rid,
+                                            data=res)
+                    nbytes["bytes_out"] = len(res)
+                self._finish(tenant, work, frame, **nbytes)
+            except BaseException as e:
+                self._finish(tenant, work, encode_response(
+                    ST_ERROR, work.op, work.rid,
+                    errtype=type(e).__name__, msg=str(e)), error=True)
+
+    def _finish(self, tenant: _Tenant, work: _Work, frame: bytes,
+                error: bool = False, **nbytes: int):
+        work.reply._resolve(frame)
+        with self._cv:
+            tenant.inflight -= 1
+            tenant.stats["errors" if error else "completed"] += 1
+            for k, v in nbytes.items():
+                tenant.stats[k] += v
+            self._cv.notify_all()
+
+    # -- observability -------------------------------------------------
+    def snapshot_stats(self) -> Dict[str, Any]:
+        """Per-tenant throughput/queue/rejection counters, the engine's
+        launch/coalesce counters (``launches < jobs`` across a
+        concurrent burst is the cross-client coalescing signature), and
+        the owned runtime's counters when scrubbing is on."""
+        with self._cv:
+            tenants = {
+                t.name: {**t.stats, "queue_depth": len(t.queue),
+                         "queued_bytes": t.queued_bytes,
+                         "inflight": t.inflight, "weight": t.weight,
+                         "qos": t.qos}
+                for t in self._order}
+            out: Dict[str, Any] = {
+                "tenants": tenants,
+                "sessions": len(self._sessions),
+                "frames": self.stats["frames"],
+                "dispatched": self.stats["dispatched"],
+                "admission_rejections":
+                    self.stats["admission_rejections"],
+            }
+        eng = self._engine
+        if eng is not None and eng._alive:
+            es = eng.snapshot_stats()
+            out["engine"] = es
+            out["jobs"] = es["jobs"]
+            out["launches"] = es["launches"]
+            out["queue_depths"] = {lane: eng.queue_depth(lane)
+                                   for lane in crystal_mod.LANES}
+        if self.runtime is not None:
+            out["runtime"] = self.runtime.snapshot_stats()
+        return out
+
+    # -- lifecycle -----------------------------------------------------
+    def close(self, timeout: float = 60.0):
+        """Graceful shutdown: stop admitting (late requests get
+        ``ST_RETRY``), drain every queued/in-flight request, then stop
+        the scheduler, completers, tenant SAIs, and the owned runtime.
+        The engine is NOT shut down — the gateway shares it with other
+        users (callers that created a private engine own its shutdown).
+        Idempotent."""
+        with self._cv:
+            already = self._closed
+            self._closed = True
+            if not already:
+                deadline = time.monotonic() + timeout
+                while not self._drained_locked() \
+                        and time.monotonic() < deadline:
+                    self._cv.wait(0.1)
+                # drain deadline expired with work still queued: bounce
+                # it with RetryLater now, BEFORE the completer sentinels
+                # go in — a reply must never be left unresolved behind a
+                # stopping scheduler
+                for t in self._order:
+                    while t.queue:
+                        w = t.queue.popleft()
+                        t.queued_bytes -= w.cost
+                        t.stats["rejected"] += 1
+                        w.reply._resolve(encode_response(
+                            ST_RETRY, w.op, w.rid,
+                            reason="gateway closing"))
+        self._stop.set()
+        with self._cv:
+            self._cv.notify_all()
+        self._scheduler.join(timeout=10)
+        if already:
+            return
+        for t in self._order:
+            t.completion_q.put(None)
+        for t in self._order:
+            if t.completer is not None:
+                t.completer.join(timeout=10)
+            t.sai.close()
+        if self.runtime is not None:
+            self.runtime.stop()

@@ -1,0 +1,372 @@
+"""Multi-tenant storage gateway (ISSUE 4).
+
+Covers the acceptance criteria: the wire codec round-trips every
+request/response shape; a burst from >= 4 concurrent client sessions
+shows cross-client coalescing (engine ``launches < jobs``); with two
+equal-weight tenants — one flooding, one trickling — the trickler's
+completed-request share stays within 2x of its weight share while the
+flooder gets RetryLater backpressure and its queue stays bounded; QoS
+classes map onto the engine's priority lanes; and the gateway can own a
+cluster runtime whose scrub/repair heals injected corruption behind the
+same front end.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import CrystalTPU, NodeRuntimeConfig, SAIConfig, make_store
+from repro.serve import storage_service as svc
+from repro.serve.storage_client import (GatewayClient, GatewayError,
+                                        RetryLater)
+from repro.serve.storage_service import GatewayConfig, StorageGateway
+
+
+def _sai_cfg(**kw):
+    return SAIConfig(ca="fixed", hasher="tpu", block_size=4096,
+                     avg_chunk=4096, min_chunk=1024, max_chunk=16384, **kw)
+
+
+def _gateway(mgr, engine, **kw):
+    cfg = dict(sai=_sai_cfg())
+    cfg.update(kw)
+    return StorageGateway(mgr, engine=engine, config=GatewayConfig(**cfg))
+
+
+# ----------------------------------------------------------------------
+# wire-format codec
+# ----------------------------------------------------------------------
+def test_wire_codec_roundtrip_requests():
+    cases = [
+        (svc.OP_OPEN, 0, 1,
+         dict(tenant="acme", qos="batch", weight=2.5)),
+        (svc.OP_WRITE, 7, 2, dict(path="/a/b", data=b"\x00\xffdata")),
+        (svc.OP_READ, 7, 3, dict(path="/a", version=-2, verify=False)),
+        (svc.OP_DELETE, 7, 4, dict(path="/a")),
+        (svc.OP_STAT, 7, 5, dict(path="/a")),
+        (svc.OP_CLOSE, 7, 6, {}),
+    ]
+    for op, sess, rid, fields in cases:
+        frame = svc.encode_request(op, sess, rid, **fields)
+        assert isinstance(frame, bytes)
+        got_op, got_sess, got_rid, got = svc.decode_request(frame)
+        assert (got_op, got_sess, got_rid) == (op, sess, rid)
+        assert got == fields
+        with pytest.raises(svc.CodecError):
+            svc.decode_request(frame[:-1] if len(frame) > 13
+                               else frame + b"x")
+
+
+def test_wire_codec_roundtrip_responses():
+    cases = [
+        (svc.ST_OK, svc.OP_OPEN, 1, dict(session=9)),
+        (svc.ST_OK, svc.OP_WRITE, 2,
+         dict(total_bytes=1 << 40, new_bytes=12, new_blocks=3,
+              dup_blocks=1)),
+        (svc.ST_OK, svc.OP_READ, 3, dict(data=b"payload\x00")),
+        (svc.ST_OK, svc.OP_DELETE, 4, dict(orphans=2)),
+        (svc.ST_OK, svc.OP_STAT, 5,
+         dict(versions=2, total_len=4096, blocks=1)),
+        (svc.ST_OK, svc.OP_CLOSE, 6, {}),
+        (svc.ST_RETRY, svc.OP_WRITE, 7, dict(reason="over budget")),
+        (svc.ST_ERROR, svc.OP_READ, 8,
+         dict(errtype="IOError", msg="bad block")),
+    ]
+    for status, op, rid, fields in cases:
+        frame = svc.encode_response(status, op, rid, **fields)
+        got_status, got_op, got_rid, got = svc.decode_response(frame)
+        assert (got_status, got_op, got_rid) == (status, op, rid)
+        assert got == fields
+
+
+# ----------------------------------------------------------------------
+# basic framed ops through one session
+# ----------------------------------------------------------------------
+def test_gateway_basic_ops_roundtrip(rng):
+    mgr, _ = make_store(4)
+    eng = CrystalTPU()
+    gw = _gateway(mgr, eng)
+    try:
+        client = GatewayClient(gw, "solo")
+        data = rng.integers(0, 256, 3 * 4096, dtype=np.uint8).tobytes()
+        res = client.write("/d/f", data)
+        assert res["total_bytes"] == len(data)
+        assert res["new_blocks"] == 3
+        assert client.read("/d/f") == data
+        st = client.stat("/d/f")
+        assert st == {"versions": 1, "total_len": len(data), "blocks": 3}
+        assert client.delete("/d/f") == 3          # orphaned digests
+        with pytest.raises(FileNotFoundError):
+            client.read("/d/f")
+        with pytest.raises(FileNotFoundError):
+            client.stat("/d/f")
+        client.close()
+    finally:
+        gw.close()
+        eng.shutdown()
+
+
+def test_unknown_session_and_bad_qos(rng):
+    mgr, _ = make_store(4)
+    eng = CrystalTPU()
+    gw = _gateway(mgr, eng)
+    try:
+        frame = svc.encode_request(svc.OP_READ, 999, 1, path="/x",
+                                   version=-1, verify=True)
+        status, op, _rid, fields = svc.decode_response(
+            gw.handle_frame(frame).result(30))
+        assert status == svc.ST_ERROR
+        assert fields["errtype"] == "UnknownSession"
+        with pytest.raises(ValueError):
+            GatewayClient(gw, "t", qos="bogus")
+    finally:
+        gw.close()
+        eng.shutdown()
+
+
+# ----------------------------------------------------------------------
+# acceptance: cross-client coalescing with >= 4 concurrent sessions
+# ----------------------------------------------------------------------
+def test_cross_client_burst_coalesces(rng):
+    """Four client sessions submit a concurrent write burst; their hash
+    requests funnel through the shared engine and fuse: engine launches
+    stay below the submitted jobs (== client requests here)."""
+    mgr, _ = make_store(4)
+    eng = CrystalTPU(coalesce_window_s=0.2)
+    gw = _gateway(mgr, eng)
+    try:
+        clients = [GatewayClient(gw, f"t{i}") for i in range(4)]
+        datas = {(i, j): rng.integers(0, 256, 4 * 4096,
+                                      dtype=np.uint8).tobytes()
+                 for i in range(4) for j in range(3)}
+        s0 = eng.snapshot_stats()
+        pending = [(key, clients[key[0]].submit_write(
+            f"/t{key[0]}/f{key[1]}", blob))
+            for key, blob in datas.items()]
+        for _key, p in pending:
+            assert p.result(120)["new_blocks"] == 4
+        s1 = eng.snapshot_stats()
+        jobs = s1["jobs"] - s0["jobs"]
+        launches = s1["launches"] - s0["launches"]
+        assert jobs >= len(datas)                 # one per request
+        assert launches < jobs, (launches, jobs)  # cross-client fusion
+        for (i, j), blob in datas.items():
+            assert clients[i].read(f"/t{i}/f{j}") == blob
+        stats = gw.snapshot_stats()
+        assert stats["launches"] < stats["jobs"]
+        assert len(stats["tenants"]) == 4
+    finally:
+        gw.close()
+        eng.shutdown()
+
+
+# ----------------------------------------------------------------------
+# acceptance: fair share + admission backpressure
+# ----------------------------------------------------------------------
+def test_fair_share_flooder_vs_trickler(rng):
+    """Equal-weight tenants, one flooding 64 KiB writes and one
+    trickling sequential 4 KiB writes: the trickler is never starved
+    (completed-request share within 2x of its 1/2 weight share), the
+    flooder sees RetryLater rejections, and its queue stays inside the
+    admission budget instead of growing without bound."""
+    mgr, _ = make_store(4)
+    eng = CrystalTPU(coalesce_window_s=0.01)
+    gw = _gateway(mgr, eng, max_inflight=2, max_outstanding=8,
+                  max_queued_bytes=512 << 10, quantum_bytes=32 << 10)
+    try:
+        flood = GatewayClient(gw, "flood")
+        trick = GatewayClient(gw, "trick")
+        flood_blob = rng.integers(0, 256, 16 * 4096,
+                                  dtype=np.uint8).tobytes()
+        trick_blob = rng.integers(0, 256, 4096,
+                                  dtype=np.uint8).tobytes()
+        stop = threading.Event()
+        flood_n = {"ok": 0, "retry": 0}
+
+        def flooder():
+            pending = []
+            i = 0
+            while not stop.is_set():
+                pending.append(flood.submit_write(f"/fl/{i}",
+                                                  flood_blob))
+                i += 1
+                if len(pending) >= 12:
+                    try:
+                        pending.pop(0).result(120)
+                        flood_n["ok"] += 1
+                    except RetryLater:
+                        flood_n["retry"] += 1
+                        time.sleep(0.001)
+            for p in pending:
+                try:
+                    p.result(120)
+                    flood_n["ok"] += 1
+                except RetryLater:
+                    flood_n["retry"] += 1
+
+        th = threading.Thread(target=flooder, daemon=True)
+        th.start()
+        time.sleep(0.05)                        # flood underway first
+        n_trick = 12
+        for i in range(n_trick):                # sequential trickle
+            trick.write_retrying(f"/tr/{i}", trick_blob, timeout=120)
+            time.sleep(0.002)
+        stop.set()
+        th.join(timeout=120)
+        stats = gw.snapshot_stats()
+        tf, tt = stats["tenants"]["flood"], stats["tenants"]["trick"]
+        # every trickled request completed
+        assert tt["completed"] >= n_trick
+        # flooder got backpressure, not unbounded queueing
+        assert tf["rejected"] > 0
+        assert flood_n["retry"] > 0
+        assert tf["queue_depth"] + tf["inflight"] <= 8
+        # completed-request share within 2x of the 1/2 weight share
+        share = tt["completed"] / max(tt["completed"] + tf["completed"],
+                                      1)
+        assert share >= 0.25, (share, tf["completed"], tt["completed"])
+        for i in range(n_trick):                # trickled data intact
+            assert trick.read(f"/tr/{i}") == trick_blob
+    finally:
+        gw.close()
+        eng.shutdown()
+
+
+def test_admission_rejects_over_budget_burst(rng):
+    """A burst past max_outstanding resolves the excess to RetryLater
+    (counted per tenant and gateway-wide); a retrying client gets
+    through once the backlog drains."""
+    mgr, _ = make_store(4)
+    eng = CrystalTPU()
+    gw = _gateway(mgr, eng, max_outstanding=2, max_inflight=1)
+    try:
+        client = GatewayClient(gw, "bursty")
+        blob = rng.integers(0, 256, 8 * 4096, dtype=np.uint8).tobytes()
+        pending = [client.submit_write(f"/b/{i}", blob)
+                   for i in range(10)]
+        ok = rejected = 0
+        for p in pending:
+            try:
+                p.result(120)
+                ok += 1
+            except RetryLater:
+                rejected += 1
+        assert ok >= 1
+        assert rejected >= 1
+        stats = gw.snapshot_stats()
+        assert stats["tenants"]["bursty"]["rejected"] == rejected
+        assert stats["admission_rejections"] == rejected
+        # the well-behaved retrier eventually lands
+        client.write_retrying("/b/again", blob, timeout=120)
+        assert client.read("/b/again") == blob
+    finally:
+        gw.close()
+        eng.shutdown()
+
+
+# ----------------------------------------------------------------------
+# QoS classes -> engine lanes
+# ----------------------------------------------------------------------
+def test_qos_classes_map_to_engine_lanes(rng):
+    mgr, _ = make_store(4)
+    eng = CrystalTPU()
+    gw = _gateway(mgr, eng)
+    try:
+        inter = GatewayClient(gw, "ui", qos="interactive")
+        batch = GatewayClient(gw, "etl", qos="batch")
+        bg = GatewayClient(gw, "sweeper", qos="scrub")
+        assert gw._tenants["ui"].sai.cfg.lane == "fg"
+        assert gw._tenants["etl"].sai.cfg.lane == "batch"
+        assert gw._tenants["sweeper"].sai.cfg.lane == "scrub"
+        blob = rng.integers(0, 256, 2 * 4096, dtype=np.uint8).tobytes()
+        s0 = eng.snapshot_stats()
+        for c in (inter, batch, bg):
+            c.write(f"/{c.tenant}/f", blob)
+            assert c.read(f"/{c.tenant}/f") == blob
+        s1 = eng.snapshot_stats()
+        # the scrub-QoS tenant's hashing is accounted on the scrub lane
+        assert s1["scrub_jobs"] > s0["scrub_jobs"]
+    finally:
+        gw.close()
+        eng.shutdown()
+
+
+# ----------------------------------------------------------------------
+# sessions / stats / owned runtime
+# ----------------------------------------------------------------------
+def test_sessions_share_tenant_and_stats(rng):
+    """Two sessions joining one tenant bill to the same fair-share
+    bucket; snapshot_stats carries the per-tenant counters."""
+    mgr, _ = make_store(4)
+    eng = CrystalTPU()
+    gw = _gateway(mgr, eng)
+    try:
+        a = GatewayClient(gw, "team", weight=2.0)
+        b = GatewayClient(gw, "team", weight=99.0)   # joins as-is
+        blob = rng.integers(0, 256, 4096, dtype=np.uint8).tobytes()
+        a.write("/s/a", blob)
+        b.write("/s/b", blob)
+        stats = gw.snapshot_stats()
+        assert stats["sessions"] == 2
+        team = stats["tenants"]["team"]
+        assert team["weight"] == 2.0                 # first open wins
+        assert team["completed"] == 2
+        assert team["bytes_in"] == 2 * len(blob)
+        assert stats["dispatched"] == 2
+    finally:
+        gw.close()
+        eng.shutdown()
+
+
+def test_gateway_owned_cluster_runtime_heals(rng):
+    """GatewayConfig(scrub=True): the gateway owns a ClusterRuntime on
+    the same engine; injected corruption behind the gateway is detected
+    and repaired, and the client read stays correct."""
+    mgr, nodes = make_store(4, replication=2)
+    eng = CrystalTPU()
+    gw = StorageGateway(mgr, engine=eng, config=GatewayConfig(
+        sai=_sai_cfg(), scrub=True,
+        runtime=NodeRuntimeConfig(scrub_backoff_depth=0)))
+    try:
+        assert gw.runtime is not None
+        client = GatewayClient(gw, "t")
+        data = rng.integers(0, 256, 6 * 4096, dtype=np.uint8).tobytes()
+        client.write("/f", data)
+        digest = next(iter(mgr.block_registry))
+        bad_nid = mgr.block_registry[digest][0]
+        blk = nodes[bad_nid].blocks[digest]
+        nodes[bad_nid].blocks[digest] = bytes([blk[0] ^ 0xFF]) + blk[1:]
+        # the owned runtime's background loops race the manual cycles
+        # here (either may detect/repair first) — drive synchronously
+        # and poll until the replica count is restored
+        gw.runtime.scrub_once()
+        deadline = time.time() + 60
+        while time.time() < deadline:
+            gw.runtime.repair_once()
+            healthy = [n for n in mgr.lookup_block(digest)
+                       if mgr.nodes[n].has(digest)]
+            if len(healthy) >= 2:
+                break
+            time.sleep(0.02)
+        assert len(healthy) >= 2
+        assert client.read("/f") == data
+        assert gw.snapshot_stats()["runtime"]["corrupt_found"] >= 1
+    finally:
+        gw.close()
+        eng.shutdown()
+    assert not gw.runtime._threads                   # stopped with close
+
+
+def test_gateway_close_idempotent(rng):
+    mgr, _ = make_store(4)
+    eng = CrystalTPU()
+    gw = _gateway(mgr, eng)
+    client = GatewayClient(gw, "t")
+    blob = rng.integers(0, 256, 4096, dtype=np.uint8).tobytes()
+    client.write("/f", blob)
+    gw.close()
+    gw.close()                                       # no-op
+    with pytest.raises(RetryLater):
+        client.write("/g", blob)                     # closed: backpressure
+    eng.shutdown()

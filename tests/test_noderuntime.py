@@ -257,18 +257,57 @@ def test_background_supervisor_heals_corruption(rng):
 
 
 def test_lane_queue_priority_order():
-    """Foreground jobs dequeue before scrub jobs; shutdown sentinels
-    dequeue only once both lanes are drained."""
+    """Foreground jobs dequeue before batch jobs, batch before scrub;
+    shutdown sentinels dequeue only once every lane is drained."""
     q = LaneQueue()
     q.put("s1", lane="scrub")
     q.put(None)                            # shutdown sentinel
+    q.put("b1", lane="batch")
     q.put("f1")
     q.put("s2", lane="scrub")
     q.put("f2", lane="fg")
-    assert [q.get_nowait() for _ in range(5)] == \
-        ["f1", "f2", "s1", "s2", None]
+    assert [q.get_nowait() for _ in range(6)] == \
+        ["f1", "f2", "b1", "s1", "s2", None]
     with pytest.raises(Exception):
         q.get_nowait()
+    assert q.depth() == 0
+    q.put("x", lane="batch")
+    assert q.depth("batch") == 1 and q.depth("fg") == 0
+
+
+def test_scrub_backs_off_under_foreground_load(rng):
+    """ISSUE 4 satellite (ROADMAP open item): with the engine's
+    foreground queue backlogged past scrub_backoff_depth, the scrubber
+    defers its burst (scrub_backoffs counts the trigger) and scans
+    nothing; with the backlog gone it scans normally."""
+    mgr, _ = make_store(2)
+    sai = SAI(mgr, _cfg(hasher="cpu"))
+    data = rng.integers(0, 256, 8 * 4096, dtype=np.uint8).tobytes()
+    sai.write("/f", data)
+    # managerless engine: queued foreground jobs never drain, so the
+    # backlog is a deterministic load signal (nothing waits on them)
+    idle = CrystalTPU(devices=[])
+    from repro.core.sai import pack_blocks
+    for _ in range(6):
+        rows, lens = pack_blocks([b"load"])
+        idle.submit("direct", rows, {"lens": lens})
+    rt = ClusterRuntime(mgr, engine=idle, config=NodeRuntimeConfig(
+        scrub_backoff_depth=2, scrub_backoff_s=0.01))
+    res = rt.scrub_once()
+    s = rt.snapshot_stats()
+    assert res["scanned"] == 0                 # sweep yielded
+    assert s["scrub_backoffs"] >= 1            # and the counter proves it
+    idle.shutdown()
+
+    eng = CrystalTPU()                         # drained engine: no backoff
+    rt2 = ClusterRuntime(mgr, engine=eng, config=NodeRuntimeConfig(
+        scrub_backoff_depth=2, scrub_backoff_s=0.01))
+    try:
+        res2 = rt2.scrub_once()
+        assert res2["scanned"] == 8
+        assert rt2.snapshot_stats()["scrub_backoffs"] == 0
+    finally:
+        eng.shutdown()
 
 
 def test_scrub_lane_yields_to_foreground(rng):

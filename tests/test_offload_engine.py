@@ -350,6 +350,40 @@ def test_default_engine_recreated_after_shutdown():
     assert e2 is not e1 and e2._alive
 
 
+def test_shutdown_idempotent(rng):
+    """ISSUE 4 satellite: repeat shutdown() calls are no-ops — no
+    double-posted sentinels, no re-joins — and in-flight work still
+    completes before the first shutdown drains the queue."""
+    eng = CrystalTPU()
+    data = rng.integers(0, 256, 4096, dtype=np.uint8)
+    job = eng.submit("direct", data, {"seg_bytes": 4096})
+    eng.shutdown()
+    eng.shutdown()
+    eng.shutdown()
+    assert job.wait().shape == (1, 16)
+    assert not eng._alive
+    # managers joined exactly once; queue holds no stray sentinels
+    assert all(not t.is_alive() for t in eng._managers)
+    assert eng.outstanding._sentinels == 0
+
+
+def test_default_engine_registers_atexit_shutdown():
+    """ISSUE 4 satellite: creating the process-wide default engine
+    registers the atexit hook, so interpreter exit never races live
+    manager threads; the hook itself is safe to run repeatedly and
+    against an explicitly shut-down engine."""
+    from repro.core import crystal as crystal_mod
+    eng = crystal_mod.default_engine()
+    assert crystal_mod._ATEXIT_REGISTERED
+    crystal_mod._shutdown_default_engine()       # what atexit will run
+    assert not eng._alive
+    assert crystal_mod._DEFAULT is None
+    crystal_mod._shutdown_default_engine()       # idempotent, no default
+    e2 = crystal_mod.default_engine()            # recreated on next use
+    assert e2._alive
+    e2.shutdown()
+
+
 def test_carried_job_completes_across_shutdown(rng):
     """A non-direct job popped as the coalescing carry must still run
     even if shutdown() lands while the fused batch executes."""

@@ -247,3 +247,138 @@ def test_read_cache_evicts_lru_and_defaults_off(rng):
     assert sai_off.read("/f") == data
     assert sai_off.read_stats["cache_hits"] == 0
     assert sai_off.read_stats["cache_misses"] == 0
+
+
+def test_read_cache_invalidated_on_quarantine(rng):
+    """ISSUE 4 satellite: a cached block whose on-node copy is
+    quarantined is evicted — the next read re-fetches and re-verifies
+    from the surviving replicas instead of serving the stale entry."""
+    mgr, nodes = make_store(4, replication=2)
+    sai = SAI(mgr, _cfg(hasher="cpu", read_cache_bytes=1 << 20))
+    data = rng.integers(0, 256, 2 * 4096, dtype=np.uint8).tobytes()
+    sai.write("/f", data)
+    assert sai.read("/f") == data                # populate the cache
+    digest = mgr.get_blockmap("/f").blocks[0].digest
+    assert digest in sai._cache
+    used = sai._cache_used
+
+    bad_nid = mgr.block_registry[digest][0]
+    mgr.quarantine_block(digest, bad_nid)
+    assert digest not in sai._cache              # invalidated, not stale
+    assert sai._cache_used < used
+    assert sai.read_stats["cache_invalidations"] == 1
+
+    gets_before = sum(n.get_count for n in nodes)
+    assert sai.read("/f") == data                # re-fetch + re-verify
+    assert sum(n.get_count for n in nodes) > gets_before
+    assert digest in sai._cache                  # re-admitted verified
+
+
+def test_read_cache_lru_eviction_order(rng):
+    """LRU regression: touching an entry moves it to the MRU end, so a
+    later insert evicts the genuinely least-recently-used block."""
+    mgr, _ = make_store(4)
+    sai = SAI(mgr, _cfg(hasher="cpu", read_cache_bytes=8192))  # 2 blocks
+    d1 = rng.integers(0, 256, 2 * 4096, dtype=np.uint8).tobytes()
+    d2 = rng.integers(0, 256, 4096, dtype=np.uint8).tobytes()
+    sai.write("/f1", d1)
+    sai.write("/f2", d2)
+    assert sai.read("/f1") == d1                 # cache [A, B]
+    dig_a, dig_b = [b.digest for b in mgr.get_blockmap("/f1").blocks]
+    assert sai._cache_get(dig_a) is not None     # touch A: order [B, A]
+    assert sai.read("/f2") == d2                 # insert C: evicts B
+    dig_c = mgr.get_blockmap("/f2").blocks[0].digest
+    assert dig_b not in sai._cache
+    assert dig_a in sai._cache and dig_c in sai._cache
+
+
+# ----------------------------------------------------------------------
+# Merkle-proof partial reads (ISSUE 4 satellite)
+# ----------------------------------------------------------------------
+def test_read_range_slices_and_fetches_only_covering_blocks(rng):
+    """read_range returns the exact byte slice for aligned, straddling,
+    tail-clamped, and out-of-range requests — and fetches ONLY the
+    covering blocks (node get counts prove it)."""
+    mgr, nodes = make_store(4)
+    eng = CrystalTPU()
+    sai = SAI(mgr, _cfg(), crystal=eng)
+    try:
+        data = rng.integers(0, 256, 10 * 4096 + 123,
+                            dtype=np.uint8).tobytes()
+        sai.write("/f", data)
+        for off, ln in [(0, 100), (4096, 4096), (5000, 9000),
+                        (10 * 4096, 1000), (0, 1 << 40),
+                        (len(data) - 10, 10), (len(data) + 5, 10),
+                        (3, 0)]:
+            assert sai.read_range("/f", off, ln) == data[off:off + ln], \
+                (off, ln)
+        gets0 = sum(n.get_count for n in nodes)
+        assert sai.read_range("/f", 4096, 4096) == data[4096:8192]
+        assert sum(n.get_count for n in nodes) - gets0 == 1
+        with pytest.raises(ValueError):
+            sai.read_range("/f", -1, 10)
+        with pytest.raises(FileNotFoundError):
+            sai.read_range("/nope", 0, 10)
+    finally:
+        sai.close()
+        eng.shutdown()
+
+
+def test_read_range_verifies_against_merkle_root(rng):
+    """A corrupt covering block is caught by the recomputed digest and
+    healed from the next replica; a tampered block-map (stored root no
+    longer matches the leaves) fails the membership proof with IOError
+    even though the block bytes match their own digest."""
+    mgr, nodes = make_store(4, replication=2)
+    eng = CrystalTPU()
+    sai = SAI(mgr, _cfg(), crystal=eng)
+    try:
+        data = rng.integers(0, 256, 6 * 4096, dtype=np.uint8).tobytes()
+        sai.write("/f", data)
+        fv = mgr.get_blockmap("/f")
+        b = fv.blocks[2]
+        bad_nid = mgr.block_registry[b.digest][0]
+        blk = nodes[bad_nid].blocks[b.digest]
+        nodes[bad_nid].blocks[b.digest] = bytes([blk[0] ^ 0xFF]) + blk[1:]
+        # corrupt copy: speculative re-fetch (full-read semantics)
+        assert sai.read_range("/f", 2 * 4096, 4096) == \
+            data[2 * 4096:3 * 4096]
+        assert sai.read_stats["refetches"] >= 1
+        assert mgr.is_quarantined(b.digest, bad_nid)
+        # metadata tamper: the stored root stops matching the leaves
+        fv.merkle_root = b"\x00" * 16
+        with pytest.raises(IOError):
+            sai.read_range("/f", 0, 4096)
+        # unverified range read still serves bytes
+        assert sai.read_range("/f", 0, 4096, verify=False) == data[:4096]
+    finally:
+        sai.close()
+        eng.shutdown()
+
+
+def test_read_range_root_check_covers_cached_blocks(rng):
+    """Regression: a warm read cache must not bypass the root check —
+    a tampered block-map fails the membership proof even when every
+    covering block is served from the verified cache."""
+    mgr, _ = make_store(4)
+    sai = SAI(mgr, _cfg(hasher="cpu", read_cache_bytes=1 << 20))
+    data = rng.integers(0, 256, 4 * 4096, dtype=np.uint8).tobytes()
+    sai.write("/f", data)
+    assert sai.read("/f") == data                # warm the cache
+    assert sai.read_range("/f", 4096, 4096) == data[4096:8192]
+    mgr.get_blockmap("/f").merkle_root = b"\x00" * 16
+    with pytest.raises(IOError):
+        sai.read_range("/f", 4096, 4096)         # cache-warm, still caught
+
+
+def test_read_range_matches_full_read_across_ca_modes(rng):
+    """Partial reads agree with full reads for CDC chunkings too (the
+    covering-block walk handles ragged chunk lengths)."""
+    for ca in ("fixed", "cdc", "cdc-gear"):
+        mgr, _ = make_store(4)
+        sai = SAI(mgr, _cfg(ca=ca, hasher="cpu"))
+        data = rng.integers(0, 256, 30_000, dtype=np.uint8).tobytes()
+        sai.write("/f", data)
+        for off, ln in [(0, 30_000), (1234, 5000), (17_000, 13_000)]:
+            assert sai.read_range("/f", off, ln) == data[off:off + ln], \
+                (ca, off, ln)
