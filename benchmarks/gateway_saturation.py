@@ -11,6 +11,14 @@ rows (``gateway/tenant_*``; the CI smoke asserts these are emitted) and
 a fairness row (min/max tenant throughput ratio; 1.0 = perfectly fair).
 Admission rejections ride along: a saturated run backpressures instead
 of queueing without bound.
+
+The socket-mode section (``gateway/socket_*`` rows; the CI smoke
+asserts them too) repeats the burst over a real localhost TCP
+``GatewayServer`` with tenant auth enforced — every client dials its
+own connection and opens with an HMAC-signed token — and reports the
+same signature: ``launches < jobs`` across connections proves the
+coalescing survives the wire (ISSUE 5: the step from in-process demo
+to servable system).
 """
 from __future__ import annotations
 
@@ -21,22 +29,30 @@ import numpy as np
 
 from benchmarks.common import mbps, scaled
 from repro.core import CrystalTPU, SAIConfig, make_store
+from repro.serve.auth import TokenAuthenticator
 from repro.serve.storage_client import GatewayClient
 from repro.serve.storage_service import GatewayConfig, StorageGateway
+from repro.serve.transport import GatewayServer
 
 CLIENT_COUNTS = scaled([2, 4, 8], [4])
 FILES_PER_CLIENT = scaled(8, 3)
 FILE_KB = scaled(512, 32)
 BLOCK_KB = scaled(128, 8)
+SOCKET_CLIENTS = scaled(4, 4)
 
 
-def _client_burst(client: GatewayClient, datas, done):
-    t0 = time.perf_counter()
-    for i, d in enumerate(datas):
-        client.write_retrying(f"/{client.tenant}/{i}", d)
-    got = client.read(f"/{client.tenant}/0")
-    assert got == datas[0]
-    done[client.tenant] = time.perf_counter() - t0
+def _client_burst(client: GatewayClient, datas, done, errors):
+    # daemon-thread failures must surface as rows-missing diagnostics,
+    # not vanish: collect and let the caller assert the list is empty
+    try:
+        t0 = time.perf_counter()
+        for i, d in enumerate(datas):
+            client.write_retrying(f"/{client.tenant}/{i}", d)
+        got = client.read(f"/{client.tenant}/0")
+        assert got == datas[0]
+        done[client.tenant] = time.perf_counter() - t0
+    except BaseException as e:
+        errors.append(f"{client.tenant}: {e!r}")
 
 
 def run() -> list:
@@ -55,9 +71,11 @@ def run() -> list:
              for _ in range(FILES_PER_CLIENT)]
             for _ in range(n_clients)]
         done: dict = {}
+        errors: list = []
         t0 = time.perf_counter()
         threads = [threading.Thread(target=_client_burst,
-                                    args=(c, d, done), daemon=True)
+                                    args=(c, d, done, errors),
+                                    daemon=True)
                    for c, d in zip(clients, per_client)]
         for t in threads:
             t.start()
@@ -67,6 +85,7 @@ def run() -> list:
         stats = gw.snapshot_stats()
         gw.close()
         engine.shutdown()
+        assert not errors, errors
 
         client_bytes = FILES_PER_CLIENT * (FILE_KB << 10)
         rates = {}
@@ -91,6 +110,67 @@ def run() -> list:
             fair = min(rates.values()) / max(max(rates.values()), 1e-9)
             rows.append((f"gateway/fairness/{n_clients}c", fair * 1e6,
                          f"min_over_max={fair:.2f}"))
-    # the smoke CI contract: per-tenant throughput rows MUST be present
+    rows.extend(_socket_mode(rng, SOCKET_CLIENTS))
+    # the smoke CI contract: per-tenant + socket rows MUST be present
     assert any(name.startswith("gateway/tenant_") for name, _, _ in rows)
+    assert any(name.startswith("gateway/socket_") for name, _, _ in rows)
+    return rows
+
+
+def _socket_mode(rng, n_clients: int) -> list:
+    """The same burst over localhost TCP with tenant auth: every client
+    opens its own GatewayServer connection with a signed token, and the
+    engine's ``launches < jobs`` across those connections is the
+    cross-connection coalescing signature over a real wire."""
+    rows: list = []
+    secrets = {f"s{i}": f"secret-{i}".encode() for i in range(n_clients)}
+    mgr, _ = make_store(4)
+    engine = CrystalTPU(coalesce_window_s=0.02)
+    gw = StorageGateway(mgr, engine=engine, config=GatewayConfig(
+        sai=SAIConfig(ca="fixed", hasher="tpu",
+                      block_size=BLOCK_KB << 10),
+        auth=TokenAuthenticator(secrets)))
+    server = GatewayServer(gw)
+    clients = [GatewayClient(server, f"s{i}", secret=secrets[f"s{i}"])
+               for i in range(n_clients)]
+    per_client = [
+        [rng.integers(0, 256, FILE_KB << 10, dtype=np.uint8).tobytes()
+         for _ in range(FILES_PER_CLIENT)]
+        for _ in range(n_clients)]
+    done: dict = {}
+    errors: list = []
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=_client_burst,
+                                args=(c, d, done, errors), daemon=True)
+               for c, d in zip(clients, per_client)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=600)
+    elapsed = time.perf_counter() - t0
+    for c in clients:
+        c.close()
+    stats = gw.snapshot_stats()
+    conn = server.snapshot_stats()
+    server.close()
+    gw.close()
+    engine.shutdown()
+    assert not errors, errors
+
+    client_bytes = FILES_PER_CLIENT * (FILE_KB << 10)
+    for name, t in sorted(done.items()):
+        rows.append((
+            f"gateway/socket_tenant_{name}/{n_clients}c",
+            t / FILES_PER_CLIENT * 1e6,
+            f"{mbps(client_bytes, t):.1f}MBps_completed="
+            f"{stats['tenants'][name]['completed']}"))
+    total = client_bytes * n_clients
+    rows.append((f"gateway/socket_aggregate/{n_clients}c",
+                 elapsed / max(n_clients * FILES_PER_CLIENT, 1) * 1e6,
+                 f"{mbps(total, elapsed):.1f}MBps_connections="
+                 f"{conn['connections']}"))
+    rows.append((f"gateway/socket_engine/{n_clients}c",
+                 float(stats["jobs"]),
+                 f"launches={stats['launches']}_jobs={stats['jobs']}_"
+                 f"coalesced={int(stats['launches'] < stats['jobs'])}"))
     return rows

@@ -735,16 +735,23 @@ class SAI:
         a partial read detects both corrupt block bytes (recomputed
         digest breaks the proof; speculative re-fetch from the next
         replica, as in full reads) and a tampered block-map entry (the
-        stored digest itself fails the proof => IOError).  The range is
-        clamped to the file length; ``raw!`` blocks (ca='none') carry no
-        content hash and are served unverified, as in full reads."""
+        stored digest itself fails the proof => IOError).  The range
+        end is clamped to the file length and ``offset == total_len``
+        (exactly at EOF) reads empty, but an offset strictly past EOF
+        raises ``ValueError`` — it names bytes that never existed,
+        which is a caller bug, not a short read; ``raw!`` blocks
+        (ca='none') carry no content hash and are served unverified, as
+        in full reads."""
         if offset < 0 or length < 0:
             raise ValueError("offset and length must be non-negative")
         fv, locmap = self.manager.get_read_plan(path, version)
         if fv is None:
             raise FileNotFoundError(path)
+        if offset > fv.total_len:
+            raise ValueError(
+                f"offset {offset} past EOF ({fv.total_len}) for {path}")
         end = min(offset + length, fv.total_len)
-        if offset >= fv.total_len or end <= offset:
+        if end <= offset:
             return b""
         first = None
         start0 = pos = 0

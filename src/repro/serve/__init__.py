@@ -1,5 +1,9 @@
 from repro.serve.servestep import make_prefill_step, make_decode_step  # noqa: F401
+from repro.serve.auth import (AuthError, TokenAuthenticator,  # noqa: F401
+                              mint_token)
 from repro.serve.storage_service import (GatewayConfig,  # noqa: F401
                                          StorageGateway)
 from repro.serve.storage_client import (GatewayClient,  # noqa: F401
                                         GatewayError, RetryLater)
+from repro.serve.transport import (GatewayServer,  # noqa: F401
+                                   SocketChannel)

@@ -1,12 +1,19 @@
 """Thin framed client for the multi-tenant storage gateway.
 
 Everything the client exchanges with the gateway is a codec frame
-(bytes) pushed through a transport channel, so swapping the in-process
-channel for a socket later changes nothing here.  Backpressure is a
+(bytes) pushed through a transport channel — the in-process
+``GatewayChannel`` and the TCP ``SocketChannel`` implement the same
+``request(frame) -> ReplyFuture`` contract, so the client works
+unchanged over either (pass a ``StorageGateway``, a ``GatewayServer``,
+a ready channel, or a ``host:port`` address).  Backpressure is a
 first-class outcome: an over-budget tenant's request resolves to
 :class:`RetryLater` (the gateway's admission control answering
 ``ST_RETRY``) rather than queueing without bound — callers either back
 off themselves or use :meth:`GatewayClient.write_retrying`.
+
+When the gateway enforces tenant auth, pass ``secret=`` (the tenant's
+shared secret; a fresh signed token is minted for the open) or a
+pre-minted ``token=``.
 """
 from __future__ import annotations
 
@@ -14,6 +21,7 @@ import itertools
 import time
 from typing import Any, Dict, Optional
 
+from repro.serve.auth import AuthError, mint_token
 from repro.serve.storage_service import (OP_CLOSE, OP_DELETE, OP_OPEN,
                                          OP_READ, OP_STAT, OP_WRITE,
                                          ST_ERROR, ST_OK, ST_RETRY,
@@ -36,6 +44,9 @@ _ERROR_TYPES = {
     "TimeoutError": TimeoutError,
     "ValueError": ValueError,
     "KeyError": KeyError,
+    "AuthError": AuthError,
+    "PermissionError": PermissionError,
+    "ConnectionError": ConnectionError,
 }
 
 
@@ -72,22 +83,48 @@ class PendingReply:
 
 
 class GatewayClient:
-    """One client session against a :class:`StorageGateway`.
+    """One client session against a storage gateway.
+
+    ``target`` may be a :class:`~repro.serve.storage_service.
+    StorageGateway` or :class:`~repro.serve.transport.GatewayServer`
+    (anything with ``connect()``), an already-open channel (anything
+    with ``request()``), or a TCP address (``"host:port"`` or
+    ``(host, port)``) to dial.  The client owns its channel and closes
+    it in :meth:`close`.
 
     ``tenant`` names the fair-share/admission bucket this session bills
     to; ``weight`` and ``qos`` ('interactive' | 'batch' | 'scrub') apply
     when this open creates the tenant (later sessions join it as-is).
-    ``submit_*`` methods are asynchronous (returning
-    :class:`PendingReply`); the plain verbs block on the reply.
+    On an auth-enforcing gateway the open must carry a signed token:
+    pass the tenant's shared ``secret`` (token minted here, expiring
+    after ``token_ttl_s``) or a pre-minted ``token``.  ``submit_*``
+    methods are asynchronous (returning :class:`PendingReply`); the
+    plain verbs block on the reply.
     """
 
-    def __init__(self, gateway, tenant: str, weight: float = 1.0,
-                 qos: str = "interactive"):
-        self._channel = gateway.connect()
+    def __init__(self, target, tenant: str, weight: float = 1.0,
+                 qos: str = "interactive",
+                 secret: Optional[bytes] = None,
+                 token: Optional[bytes] = None,
+                 token_ttl_s: float = 30.0):
+        if hasattr(target, "connect"):
+            self._channel = target.connect()
+        elif hasattr(target, "request"):
+            self._channel = target
+        else:
+            from repro.serve.transport import SocketChannel
+            self._channel = SocketChannel(target)
         self._rid = itertools.count(1)
         self.tenant = tenant
-        resp = self._rpc(OP_OPEN, session=0, tenant=tenant,
-                         weight=weight, qos=qos).result()
+        if token is None and secret is not None:
+            token = mint_token(tenant, secret, ttl_s=token_ttl_s)
+        try:
+            resp = self._rpc(OP_OPEN, session=0, tenant=tenant,
+                             weight=weight, qos=qos,
+                             token=token or b"").result()
+        except BaseException:
+            self._close_channel()
+            raise
         self._session = resp["session"]
 
     # -- framing -------------------------------------------------------
@@ -119,13 +156,24 @@ class GatewayClient:
                        timeout: float = 120.0,
                        backoff_s: float = 0.002) -> Dict[str, int]:
         """``write`` that absorbs :class:`RetryLater` with a small
-        backoff until ``timeout`` — the well-behaved flooder."""
+        backoff until ``timeout`` — the well-behaved flooder.
+
+        ``timeout`` is a total wall-clock deadline: each attempt is
+        clamped to the time *remaining* (passing the full timeout per
+        attempt used to let one retry overshoot the deadline by ~2x),
+        and once the deadline is exhausted the loop raises
+        :class:`RetryLater` instead of starting another attempt."""
         deadline = time.monotonic() + timeout
         while True:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise RetryLater(
+                    f"write_retrying deadline ({timeout}s) exhausted "
+                    f"for {path}")
             try:
-                return self.write(path, data, timeout=timeout)
+                return self.write(path, data, timeout=remaining)
             except RetryLater:
-                if time.monotonic() >= deadline:
+                if time.monotonic() + backoff_s >= deadline:
                     raise
                 time.sleep(backoff_s)
 
@@ -141,5 +189,15 @@ class GatewayClient:
         """Delete every version of ``path``; returns orphaned digests."""
         return self._rpc(OP_DELETE, path=path).result()["orphans"]
 
+    def _close_channel(self):
+        close = getattr(self._channel, "close", None)
+        if close is not None:
+            close()
+
     def close(self):
-        self._rpc(OP_CLOSE).result()
+        """Close the gateway session, then the transport channel (a
+        no-op in-process; a graceful drain + disconnect over TCP)."""
+        try:
+            self._rpc(OP_CLOSE).result()
+        finally:
+            self._close_channel()

@@ -56,6 +56,7 @@ counters plus the engine's fused-launch counters; the
 from __future__ import annotations
 
 import dataclasses
+import math
 import queue
 import struct
 import threading
@@ -68,12 +69,19 @@ from repro.core.castore import MetadataManager
 from repro.core.crystal import CrystalTPU
 from repro.core.noderuntime import ClusterRuntime, NodeRuntimeConfig
 from repro.core.sai import SAI, SAIConfig
+from repro.serve.auth import AuthError, TokenAuthenticator
 
 # ----------------------------------------------------------------------
 # wire-format codec: framed requests/responses (transport-independent)
 # ----------------------------------------------------------------------
 OP_OPEN, OP_WRITE, OP_READ, OP_DELETE, OP_STAT, OP_CLOSE = range(6)
 ST_OK, ST_RETRY, ST_ERROR = range(3)
+
+# Default cap on a single codec frame.  The socket transport refuses to
+# allocate a receive buffer past this from a wire length prefix, and
+# ``decode_request`` enforces it again at the codec layer so a hostile
+# peer can't push an oversized frame through any transport.
+MAX_FRAME_BYTES = 64 << 20
 
 OP_NAMES = {OP_OPEN: "open", OP_WRITE: "write", OP_READ: "read",
             OP_DELETE: "delete", OP_STAT: "stat", OP_CLOSE: "close"}
@@ -101,6 +109,28 @@ def _pack_str(s: str) -> bytes:
     return _U16.pack(len(b)) + b
 
 
+def _pack_bytes(data) -> bytes:
+    # the length check runs BEFORE struct packs it: data >= 4 GiB must
+    # raise CodecError, not leak struct.error out of the codec
+    if len(data) > 0xFFFFFFFF:
+        raise CodecError(
+            f"payload too large for u32 length ({len(data)} bytes)")
+    return _U32.pack(len(data)) + data
+
+
+def _pack_bytes16(data: bytes) -> bytes:
+    if len(data) > 0xFFFF:
+        raise CodecError(f"short byte field too long ({len(data)})")
+    return _U16.pack(len(data)) + data
+
+
+def _take_bytes16(buf: bytes, off: int) -> Tuple[bytes, int]:
+    (n,), off = _take(buf, off, _U16)
+    if off + n > len(buf):
+        raise CodecError("truncated short byte field")
+    return bytes(buf[off:off + n]), off + n
+
+
 def _take(buf: bytes, off: int, st: struct.Struct):
     if off + st.size > len(buf):
         raise CodecError("truncated frame")
@@ -111,7 +141,13 @@ def _take_str(buf: bytes, off: int) -> Tuple[str, int]:
     (n,), off = _take(buf, off, _U16)
     if off + n > len(buf):
         raise CodecError("truncated string")
-    return buf[off:off + n].decode("utf-8"), off + n
+    try:
+        s = buf[off:off + n].decode("utf-8")
+    except UnicodeDecodeError as e:
+        # wire bytes are untrusted: decode failures are codec errors,
+        # same contract as truncation
+        raise CodecError(f"invalid utf-8 in string field: {e}") from None
+    return s, off + n
 
 
 def _take_bytes(buf: bytes, off: int) -> Tuple[bytes, int]:
@@ -125,10 +161,10 @@ def encode_request(op: int, session: int, rid: int, **f: Any) -> bytes:
     head = _REQ_HDR.pack(op, session, rid)
     if op == OP_OPEN:
         return head + _pack_str(f["tenant"]) + _pack_str(f["qos"]) \
-            + _F64.pack(float(f.get("weight", 1.0)))
+            + _F64.pack(float(f.get("weight", 1.0))) \
+            + _pack_bytes16(f.get("token", b""))
     if op == OP_WRITE:
-        data = f["data"]
-        return head + _pack_str(f["path"]) + _U32.pack(len(data)) + data
+        return head + _pack_str(f["path"]) + _pack_bytes(f["data"])
     if op == OP_READ:
         return head + _pack_str(f["path"]) \
             + _I32.pack(int(f.get("version", -1))) \
@@ -140,14 +176,25 @@ def encode_request(op: int, session: int, rid: int, **f: Any) -> bytes:
     raise CodecError(f"unknown opcode {op}")
 
 
-def decode_request(frame: bytes):
-    """-> (op, session, rid, fields)."""
+def decode_request(frame: bytes,
+                   max_frame_bytes: Optional[int] = MAX_FRAME_BYTES):
+    """-> (op, session, rid, fields).
+
+    ``max_frame_bytes`` bounds the whole frame (pass ``None`` to
+    disable): the socket transport already refuses oversized length
+    prefixes, but enforcing the cap here too means no transport can
+    hand the gateway an unbounded buffer."""
+    if max_frame_bytes is not None and len(frame) > max_frame_bytes:
+        raise CodecError(
+            f"frame of {len(frame)} bytes exceeds max_frame_bytes "
+            f"({max_frame_bytes})")
     (op, session, rid), off = _take(frame, 0, _REQ_HDR)
     f: Dict[str, Any] = {}
     if op == OP_OPEN:
         f["tenant"], off = _take_str(frame, off)
         f["qos"], off = _take_str(frame, off)
         (f["weight"],), off = _take(frame, off, _F64)
+        f["token"], off = _take_bytes16(frame, off)
     elif op == OP_WRITE:
         f["path"], off = _take_str(frame, off)
         f["data"], off = _take_bytes(frame, off)
@@ -180,8 +227,7 @@ def encode_response(status: int, op: int, rid: int, **f: Any) -> bytes:
             + _U64.pack(f["new_bytes"]) + _U32.pack(f["new_blocks"]) \
             + _U32.pack(f["dup_blocks"])
     if op == OP_READ:
-        data = f["data"]
-        return head + _U32.pack(len(data)) + data
+        return head + _pack_bytes(f["data"])
     if op == OP_DELETE:
         return head + _U32.pack(f["orphans"])
     if op == OP_STAT:
@@ -260,6 +306,10 @@ class GatewayChannel:
     def request(self, frame: bytes) -> ReplyFuture:
         return self._gateway.handle_frame(frame)
 
+    def close(self):
+        """No connection to tear down in-process; present so clients
+        can close any channel (socket or not) uniformly."""
+
 
 # ----------------------------------------------------------------------
 # gateway
@@ -275,6 +325,12 @@ class GatewayConfig:
     scrub: bool = False               # own + run a ClusterRuntime
     runtime: Optional[NodeRuntimeConfig] = None
     idle_poll_s: float = 0.05         # scheduler idle wakeup
+    auth: Optional[TokenAuthenticator] = None  # None = trusted (e.g.
+    #                                   in-process); set => OP_OPEN must
+    #                                   carry a valid signed token and
+    #                                   the session binds to the token's
+    #                                   tenant, not the claimed name
+    max_frame_bytes: int = MAX_FRAME_BYTES
 
 
 @dataclasses.dataclass
@@ -370,9 +426,17 @@ class StorageGateway:
     def handle_frame(self, frame: bytes) -> ReplyFuture:
         reply = ReplyFuture()
         try:
-            op, session, rid, f = decode_request(frame)
+            op, session, rid, f = decode_request(
+                frame, max_frame_bytes=self.cfg.max_frame_bytes)
         except Exception as e:
-            reply._resolve(encode_response(ST_ERROR, 0, 0,
+            # salvage op/rid from the fixed header when present: over a
+            # socket the rid is the reply routing key, and a rid=0 error
+            # would be undeliverable — the client would time out instead
+            # of seeing the CodecError
+            op = rid = 0
+            if len(frame) >= _REQ_HDR.size:
+                op, _session, rid = _REQ_HDR.unpack_from(frame)
+            reply._resolve(encode_response(ST_ERROR, op, rid,
                                            errtype="CodecError",
                                            msg=str(e)))
             return reply
@@ -414,11 +478,32 @@ class StorageGateway:
 
     def _open_session(self, rid: int, f: Dict[str, Any],
                       reply: ReplyFuture):
+        if self.cfg.auth is not None:
+            # authenticate BEFORE anything else: the session's tenant is
+            # whatever the verified token says, never the claimed field
+            try:
+                f["tenant"] = self.cfg.auth.verify(
+                    f.get("token", b""), claimed=f["tenant"])
+            except AuthError as e:
+                reply._resolve(encode_response(
+                    ST_ERROR, OP_OPEN, rid, errtype="AuthError",
+                    msg=str(e)))
+                return
         qos = f["qos"]
         if qos not in QOS_LANES:
             reply._resolve(encode_response(
                 ST_ERROR, OP_OPEN, rid, errtype="ValueError",
                 msg=f"unknown qos {qos!r}"))
+            return
+        weight = f["weight"]
+        # a wire frame can carry weight=0, negative, or NaN; any of
+        # those zeroes (or poisons) quantum_bytes * weight and the
+        # tenant's WDRR deficit never grows — it would starve forever
+        if not math.isfinite(weight) or weight <= 0.0:
+            reply._resolve(encode_response(
+                ST_ERROR, OP_OPEN, rid, errtype="ValueError",
+                msg=f"tenant weight must be finite and > 0, "
+                    f"got {weight!r}"))
             return
         with self._cv:
             if self._closed:

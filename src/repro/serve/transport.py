@@ -1,0 +1,405 @@
+"""TCP socket transport for the storage gateway.
+
+PR 4 built the framed wire codec and an in-process channel with exactly
+the contract a socket needs (``request(frame) -> ReplyFuture``); this
+module carries those same frames over a real stream so clients in other
+processes/hosts reach the gateway — and their hash bursts still fuse on
+one shared engine (the paper's cross-client offload argument only pays
+off when many *remote* clients' requests coalesce on one device).
+
+Stream framing is length-prefixed: every codec frame is sent as a
+``!I`` byte-count header followed by the frame bytes.  The length
+prefix is attacker-controlled on the server side, so both ends refuse
+to allocate past ``max_frame_bytes`` — a hostile prefix kills the
+connection instead of the process.
+
+  SocketChannel  — client endpoint.  ``request(frame)`` registers the
+                   frame's rid, sends it, and returns a
+                   :class:`ReplyFuture`; a reader thread matches
+                   response frames back to futures by rid (responses
+                   may arrive out of request order — the gateway
+                   completes tenants independently).  Abrupt disconnect
+                   resolves every in-flight future with an ``ST_ERROR``
+                   (``ConnectionError``) frame; graceful ``close()``
+                   half-closes the write side and drains outstanding
+                   replies before tearing down.
+  GatewayServer  — accept loop + per-connection reader/writer threads.
+                   The reader decodes stream frames and feeds
+                   ``gateway.handle_frame``; the writer sends each
+                   connection's replies back in request order.  A
+                   client half-close (EOF after its last request) still
+                   gets all pending responses; an abrupt disconnect
+                   just drains the futures without writing.  Server
+                   ``close()`` stops accepting, half-closes every
+                   connection, and joins the drain.
+
+``GatewayClient`` works unchanged over either transport — pass it a
+``GatewayServer``/``SocketChannel``/address instead of a
+``StorageGateway``.
+"""
+from __future__ import annotations
+
+import queue
+import socket
+import struct
+import threading
+from typing import Dict, Optional, Tuple, Union
+
+from repro.serve.storage_service import (MAX_FRAME_BYTES, ST_ERROR,
+                                         ReplyFuture, StorageGateway,
+                                         _REQ_HDR, _RSP_HDR,
+                                         encode_response)
+
+_LEN = struct.Struct("!I")
+
+Address = Union[str, Tuple[str, int]]
+
+
+class FrameError(ConnectionError):
+    """The stream violated the framing protocol (oversized length
+    prefix, or EOF in the middle of a frame)."""
+
+
+def parse_address(address: Address) -> Tuple[str, int]:
+    if isinstance(address, str):
+        host, _, port = address.rpartition(":")
+        if not host or not port.isdigit():
+            raise ValueError(f"bad address {address!r}; want host:port")
+        return host, int(port)
+    host, port = address
+    return host, int(port)
+
+
+def send_frame(sock: socket.socket, frame: bytes,
+               max_frame_bytes: int = MAX_FRAME_BYTES):
+    """Callers must serialize sends per socket (client write lock /
+    single server writer thread) — the prefix and body are two writes
+    for large frames, so interleaved senders would corrupt the stream."""
+    if len(frame) > max_frame_bytes:
+        raise FrameError(
+            f"refusing to send {len(frame)}-byte frame "
+            f"(max_frame_bytes={max_frame_bytes})")
+    if len(frame) <= 1 << 16:
+        sock.sendall(_LEN.pack(len(frame)) + frame)
+    else:
+        # don't copy a large payload just to prepend 4 bytes
+        sock.sendall(_LEN.pack(len(frame)))
+        sock.sendall(frame)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
+    """Read exactly ``n`` bytes; None on clean EOF at a frame boundary,
+    FrameError on EOF mid-frame."""
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            if not buf:
+                return None
+            raise FrameError("connection closed mid-frame")
+        buf += chunk
+    return bytes(buf)
+
+
+def recv_frame(sock: socket.socket,
+               max_frame_bytes: int = MAX_FRAME_BYTES
+               ) -> Optional[bytes]:
+    """Read one length-prefixed frame; None on clean EOF.  The length
+    prefix is validated BEFORE any allocation — a hostile peer cannot
+    make us reserve an unbounded buffer."""
+    head = _recv_exact(sock, _LEN.size)
+    if head is None:
+        return None
+    (n,) = _LEN.unpack(head)
+    if n > max_frame_bytes:
+        raise FrameError(
+            f"peer announced {n}-byte frame "
+            f"(max_frame_bytes={max_frame_bytes})")
+    if n == 0:
+        return b""
+    got = _recv_exact(sock, n)
+    if got is None:
+        raise FrameError("connection closed mid-frame")
+    return got
+
+
+# ----------------------------------------------------------------------
+# client endpoint
+# ----------------------------------------------------------------------
+class SocketChannel:
+    """Client side of one TCP connection to a :class:`GatewayServer`.
+
+    Implements the in-process ``GatewayChannel`` contract —
+    ``request(frame) -> ReplyFuture`` — so :class:`~repro.serve.
+    storage_client.GatewayClient` is transport-agnostic.  Request ids
+    must be unique per connection (``GatewayClient`` already counts
+    them per session); replies are matched by rid, so they may resolve
+    in any order.
+    """
+
+    def __init__(self, address: Address,
+                 max_frame_bytes: int = MAX_FRAME_BYTES,
+                 connect_timeout_s: float = 10.0):
+        self._max = max_frame_bytes
+        self._sock = socket.create_connection(parse_address(address),
+                                              timeout=connect_timeout_s)
+        self._sock.settimeout(None)
+        self._lock = threading.Lock()
+        self._wlock = threading.Lock()
+        self._pending: Dict[int, Tuple[int, ReplyFuture]] = {}
+        self._closing = False          # no NEW requests
+        self._dead = False             # reader gone; nothing in flight
+        self._reader = threading.Thread(target=self._reader_loop,
+                                        daemon=True,
+                                        name="socket-channel-rx")
+        self._reader.start()
+
+    # -- transport contract --------------------------------------------
+    def request(self, frame: bytes) -> ReplyFuture:
+        op, _session, rid = _REQ_HDR.unpack_from(frame)
+        reply = ReplyFuture()
+        with self._lock:
+            if self._closing or self._dead:
+                reply._resolve(self._error_frame(
+                    op, rid, "socket channel is closed"))
+                return reply
+            if rid in self._pending:
+                raise ValueError(f"duplicate in-flight rid {rid}")
+            self._pending[rid] = (op, reply)
+        try:
+            with self._wlock:
+                send_frame(self._sock, frame, self._max)
+        except OSError as e:
+            with self._lock:
+                self._pending.pop(rid, None)
+            reply._resolve(self._error_frame(op, rid, f"send failed: {e}"))
+        return reply
+
+    def close(self, timeout_s: float = 10.0):
+        """Graceful: half-close the write side so the server sees EOF
+        after our last request, wait for it to drain our outstanding
+        replies, then release the socket.  Idempotent."""
+        with self._lock:
+            if self._closing:
+                return
+            self._closing = True
+        with self._wlock:        # let an in-progress send finish: a
+            try:                 # mid-frame SHUT_WR would look like a
+                self._sock.shutdown(socket.SHUT_WR)   # protocol abort
+            except OSError:      # to the server and drop that reply
+                pass
+        self._reader.join(timeout=timeout_s)
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+    # -- internals -----------------------------------------------------
+    @staticmethod
+    def _error_frame(op: int, rid: int, msg: str) -> bytes:
+        return encode_response(ST_ERROR, op, rid,
+                               errtype="ConnectionError", msg=msg)
+
+    def _reader_loop(self):
+        why = "server closed the connection"
+        try:
+            while True:
+                frame = recv_frame(self._sock, self._max)
+                if frame is None:
+                    break
+                if len(frame) < _RSP_HDR.size:
+                    why = "short response frame"
+                    break
+                _status, _op, rid = _RSP_HDR.unpack_from(frame)
+                with self._lock:
+                    entry = self._pending.pop(rid, None)
+                if entry is not None:
+                    entry[1]._resolve(frame)
+        except (OSError, FrameError) as e:
+            why = f"connection lost: {e}"
+        finally:
+            with self._lock:
+                self._dead = True
+                stranded = list(self._pending.items())
+                self._pending.clear()
+            # abrupt disconnect: every in-flight future resolves to an
+            # ST_ERROR frame instead of hanging its waiter forever
+            for rid, (op, reply) in stranded:
+                reply._resolve(self._error_frame(op, rid, why))
+
+
+# ----------------------------------------------------------------------
+# server
+# ----------------------------------------------------------------------
+class _Connection:
+    def __init__(self, server: "GatewayServer", sock: socket.socket,
+                 peer):
+        self.server = server
+        self.sock = sock
+        self.peer = peer
+        self.aborted = False           # peer vanished: drain, don't send
+        self.writeq: "queue.Queue" = queue.Queue()
+        self.reader = threading.Thread(target=self._reader_loop,
+                                       daemon=True,
+                                       name=f"gw-conn-rx-{peer}")
+        self.writer = threading.Thread(target=self._writer_loop,
+                                       daemon=True,
+                                       name=f"gw-conn-tx-{peer}")
+        self.reader.start()
+        self.writer.start()
+
+    def _reader_loop(self):
+        srv = self.server
+        try:
+            while True:
+                frame = recv_frame(self.sock, srv.max_frame_bytes)
+                if frame is None:      # half-close: no more requests,
+                    break              # writer still drains responses
+                with srv._lock:
+                    srv.stats["frames"] += 1
+                self.writeq.put(srv.gateway.handle_frame(frame))
+        except FrameError:
+            # protocol violation (hostile length prefix, EOF mid-frame):
+            # stop reading and tell the writer to drain in-flight
+            # replies without touching the untrusted stream
+            self.aborted = True
+            with srv._lock:
+                srv.stats["frame_errors"] += 1
+        except OSError:
+            # routine abrupt disconnect (RST, crashed client) — not a
+            # protocol violation; counted separately so frame_errors
+            # stays a clean hostile-peer signal
+            self.aborted = True
+            with srv._lock:
+                srv.stats["disconnects"] += 1
+        finally:
+            self.writeq.put(None)
+
+    def _writer_loop(self):
+        srv = self.server
+        try:
+            while True:
+                reply = self.writeq.get()
+                if reply is None:
+                    break
+                try:
+                    frame = reply.result(timeout=srv.reply_timeout_s)
+                except TimeoutError:
+                    # a stuck gateway reply: the connection is wedged
+                    # (responses are written in request order); abort
+                    self.aborted = True
+                    break
+                if self.aborted:
+                    continue           # keep draining futures
+                try:
+                    send_frame(self.sock, frame, srv.max_frame_bytes)
+                except OSError:
+                    self.aborted = True
+        finally:
+            self.half_close(read=True)
+            try:
+                self.sock.close()
+            except OSError:
+                pass
+            srv._forget(self)
+
+    def half_close(self, read: bool = True):
+        try:
+            self.sock.shutdown(socket.SHUT_RD if read
+                               else socket.SHUT_WR)
+        except OSError:
+            pass
+
+    def join(self, timeout_s: float):
+        self.reader.join(timeout=timeout_s)
+        self.writer.join(timeout=timeout_s)
+
+
+class GatewayServer:
+    """Accept loop serving a :class:`StorageGateway` over TCP.
+
+    ``port=0`` binds an ephemeral port; ``address`` is the bound
+    ``(host, port)``.  ``connect()`` returns a :class:`SocketChannel`
+    to this server, so ``GatewayClient(server, ...)`` works exactly
+    like ``GatewayClient(gateway, ...)``.  The server owns its
+    connections but NOT the gateway (callers may front one gateway
+    with several listeners, or keep serving in-process clients).
+    """
+
+    def __init__(self, gateway: StorageGateway, host: str = "127.0.0.1",
+                 port: int = 0,
+                 max_frame_bytes: Optional[int] = None,
+                 backlog: int = 64, reply_timeout_s: float = 600.0):
+        self.gateway = gateway
+        self.max_frame_bytes = (gateway.cfg.max_frame_bytes
+                                if max_frame_bytes is None
+                                else max_frame_bytes)
+        self.reply_timeout_s = reply_timeout_s
+        self._lock = threading.Lock()
+        self._conns: set = set()
+        self._closed = False
+        self.stats = {"connections": 0, "frames": 0, "frame_errors": 0,
+                      "disconnects": 0}
+        self._lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._lsock.bind((host, port))
+        self._lsock.listen(backlog)
+        self.address: Tuple[str, int] = self._lsock.getsockname()[:2]
+        self._acceptor = threading.Thread(target=self._accept_loop,
+                                          daemon=True,
+                                          name="gw-server-accept")
+        self._acceptor.start()
+
+    def connect(self) -> SocketChannel:
+        return SocketChannel(self.address,
+                             max_frame_bytes=self.max_frame_bytes)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def _accept_loop(self):
+        while True:
+            try:
+                sock, peer = self._lsock.accept()
+            except OSError:            # listener closed
+                return
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            with self._lock:
+                if self._closed:
+                    try:
+                        sock.close()
+                    except OSError:
+                        pass
+                    continue
+                self.stats["connections"] += 1
+                self._conns.add(_Connection(self, sock, peer))
+
+    def _forget(self, conn: _Connection):
+        with self._lock:
+            self._conns.discard(conn)
+
+    def snapshot_stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {**self.stats, "open_connections": len(self._conns)}
+
+    def close(self, timeout_s: float = 30.0):
+        """Graceful: stop accepting, half-close every connection's read
+        side (reader sees EOF), and join the writers — each drains its
+        in-flight replies before the socket closes.  Idempotent."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            conns = list(self._conns)
+        try:
+            self._lsock.close()
+        except OSError:
+            pass
+        self._acceptor.join(timeout=timeout_s)
+        for conn in conns:
+            conn.half_close(read=True)
+        for conn in conns:
+            conn.join(timeout_s)

@@ -40,7 +40,8 @@ def _gateway(mgr, engine, **kw):
 def test_wire_codec_roundtrip_requests():
     cases = [
         (svc.OP_OPEN, 0, 1,
-         dict(tenant="acme", qos="batch", weight=2.5)),
+         dict(tenant="acme", qos="batch", weight=2.5,
+              token=b"\x01signed-token")),
         (svc.OP_WRITE, 7, 2, dict(path="/a/b", data=b"\x00\xffdata")),
         (svc.OP_READ, 7, 3, dict(path="/a", version=-2, verify=False)),
         (svc.OP_DELETE, 7, 4, dict(path="/a")),
@@ -356,6 +357,174 @@ def test_gateway_owned_cluster_runtime_heals(rng):
         gw.close()
         eng.shutdown()
     assert not gw.runtime._threads                   # stopped with close
+
+
+# ----------------------------------------------------------------------
+# codec hardening (ISSUE 5 satellites)
+# ----------------------------------------------------------------------
+def test_codec_fuzz_truncations_and_trailing_bytes():
+    """Random truncations and trailing garbage of every opcode's frames
+    must raise CodecError — never struct.error or IndexError — because
+    these bytes arrive off an untrusted socket."""
+    import random
+    rnd = random.Random(1234)
+    req_frames = [
+        svc.encode_request(svc.OP_OPEN, 0, 1, tenant="t", qos="batch",
+                           weight=1.5, token=b"tok" * 7),
+        svc.encode_request(svc.OP_WRITE, 3, 2, path="/p",
+                           data=b"x" * 100),
+        svc.encode_request(svc.OP_READ, 3, 3, path="/p", version=-1,
+                           verify=True),
+        svc.encode_request(svc.OP_DELETE, 3, 4, path="/p"),
+        svc.encode_request(svc.OP_STAT, 3, 5, path="/p"),
+        svc.encode_request(svc.OP_CLOSE, 3, 6),
+    ]
+    rsp_frames = [
+        svc.encode_response(svc.ST_OK, svc.OP_OPEN, 1, session=4),
+        svc.encode_response(svc.ST_OK, svc.OP_WRITE, 2, total_bytes=9,
+                            new_bytes=9, new_blocks=1, dup_blocks=0),
+        svc.encode_response(svc.ST_OK, svc.OP_READ, 3, data=b"d" * 64),
+        svc.encode_response(svc.ST_OK, svc.OP_DELETE, 4, orphans=1),
+        svc.encode_response(svc.ST_OK, svc.OP_STAT, 5, versions=1,
+                            total_len=9, blocks=1),
+        svc.encode_response(svc.ST_OK, svc.OP_CLOSE, 6),
+        svc.encode_response(svc.ST_RETRY, svc.OP_WRITE, 7, reason="r"),
+        svc.encode_response(svc.ST_ERROR, svc.OP_READ, 8,
+                            errtype="IOError", msg="m"),
+    ]
+    for frames, decode in ((req_frames, svc.decode_request),
+                           (rsp_frames, svc.decode_response)):
+        for frame in frames:
+            for _ in range(40):
+                cut = rnd.randrange(len(frame))
+                with pytest.raises(svc.CodecError):
+                    decode(frame[:cut])
+            for _ in range(10):
+                junk = bytes(rnd.randrange(256)
+                             for _ in range(rnd.randrange(1, 9)))
+                with pytest.raises(svc.CodecError):
+                    decode(frame + junk)
+    # invalid utf-8 in a wire string field (CodecError, never
+    # UnicodeDecodeError)
+    with pytest.raises(svc.CodecError):
+        svc.decode_request(svc._REQ_HDR.pack(svc.OP_STAT, 1, 1)
+                           + b"\x00\x02\xff\xfe")
+    with pytest.raises(svc.CodecError):
+        svc.decode_response(svc._RSP_HDR.pack(svc.ST_RETRY, svc.OP_WRITE,
+                                              1) + b"\x00\x02\xff\xfe")
+    # unknown opcodes
+    for frame in req_frames:
+        with pytest.raises(svc.CodecError):
+            svc.decode_request(bytes([250]) + frame[1:])
+    with pytest.raises(svc.CodecError):
+        svc.decode_response(svc._RSP_HDR.pack(svc.ST_OK, 250, 1))
+
+
+def test_codec_oversized_payload_raises_codec_error():
+    """Payloads whose length doesn't fit the u32 prefix raise CodecError
+    at encode time (previously raw struct.error), without materializing
+    4 GiB: a __len__-lying stand-in is rejected before any packing."""
+    class _Huge(bytes):
+        def __len__(self):
+            return 1 << 32
+    with pytest.raises(svc.CodecError):
+        svc.encode_request(svc.OP_WRITE, 1, 1, path="/p", data=_Huge())
+    with pytest.raises(svc.CodecError):
+        svc.encode_response(svc.ST_OK, svc.OP_READ, 1, data=_Huge())
+    with pytest.raises(svc.CodecError):
+        svc.encode_request(svc.OP_OPEN, 0, 1, tenant="t", qos="batch",
+                           weight=1.0, token=b"x" * 0x10001)
+
+
+def test_decode_request_enforces_max_frame_bytes():
+    frame = svc.encode_request(svc.OP_WRITE, 1, 1, path="/p",
+                               data=b"x" * 4096)
+    assert svc.decode_request(frame)[0] == svc.OP_WRITE
+    with pytest.raises(svc.CodecError):
+        svc.decode_request(frame, max_frame_bytes=1024)
+    # a gateway configured with a small cap bounces the frame too —
+    # and the ST_ERROR echoes the request's op/rid (salvaged from the
+    # fixed header) so a socket client can route it, not rid=0
+    mgr, _ = make_store(4)
+    eng = CrystalTPU()
+    gw = _gateway(mgr, eng, max_frame_bytes=1024)
+    try:
+        status, op, rid, fields = svc.decode_response(
+            gw.handle_frame(frame).result(30))
+        assert (status, op, rid) == (svc.ST_ERROR, svc.OP_WRITE, 1)
+        assert fields["errtype"] == "CodecError"
+        # truncated body, intact header: same salvage
+        status, op, rid, fields = svc.decode_response(
+            gw.handle_frame(svc.encode_request(
+                svc.OP_STAT, 1, 42, path="/p")[:-2]).result(30))
+        assert (status, op, rid) == (svc.ST_ERROR, svc.OP_STAT, 42)
+        assert fields["errtype"] == "CodecError"
+    finally:
+        gw.close()
+        eng.shutdown()
+
+
+def test_open_rejects_bad_weights(rng):
+    """weight=0, negative, or NaN on the wire would zero (or poison)
+    quantum_bytes * weight and starve the tenant's WDRR credit forever;
+    _open_session answers ST_ERROR instead."""
+    mgr, _ = make_store(4)
+    eng = CrystalTPU()
+    gw = _gateway(mgr, eng)
+    try:
+        for bad in (0.0, -1.0, float("nan"), float("inf"),
+                    float("-inf")):
+            frame = svc.encode_request(svc.OP_OPEN, 0, 1, tenant="w",
+                                       qos="batch", weight=bad)
+            status, _op, _rid, fields = svc.decode_response(
+                gw.handle_frame(frame).result(30))
+            assert status == svc.ST_ERROR, bad
+            assert fields["errtype"] == "ValueError", bad
+            with pytest.raises(ValueError):
+                GatewayClient(gw, "w2", weight=bad)
+        assert gw.snapshot_stats()["tenants"] == {}  # none created
+        client = GatewayClient(gw, "ok", weight=0.5)  # sane weight fine
+        blob = rng.integers(0, 256, 4096, dtype=np.uint8).tobytes()
+        client.write("/f", blob)
+        assert client.read("/f") == blob
+    finally:
+        gw.close()
+        eng.shutdown()
+
+
+def test_write_retrying_respects_total_deadline():
+    """write_retrying used to pass the FULL timeout to every attempt,
+    so one queued retry could overshoot the deadline by ~2x.  Against a
+    channel that always answers ST_RETRY, total wall time must stay
+    near the requested deadline and the loop must raise RetryLater."""
+    class _RetryChannel:
+        def request(self, frame):
+            op, _sess, rid, _f = svc.decode_request(frame)
+            fut = svc.ReplyFuture()
+            if op == svc.OP_OPEN:
+                fut._resolve(svc.encode_response(svc.ST_OK, op, rid,
+                                                 session=1))
+            else:
+                fut._resolve(svc.encode_response(svc.ST_RETRY, op, rid,
+                                                 reason="always busy"))
+            return fut
+
+        def close(self):
+            pass
+
+    class _Target:
+        def connect(self):
+            return _RetryChannel()
+
+    client = GatewayClient(_Target(), "t")
+    t0 = time.monotonic()
+    with pytest.raises(RetryLater):
+        client.write_retrying("/f", b"x", timeout=0.25, backoff_s=0.01)
+    elapsed = time.monotonic() - t0
+    assert elapsed < 0.25 * 1.5, elapsed        # no 2x overshoot
+    # a pre-expired deadline raises immediately, zero attempts
+    with pytest.raises(RetryLater):
+        client.write_retrying("/f", b"x", timeout=0.0)
 
 
 def test_gateway_close_idempotent(rng):

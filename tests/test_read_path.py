@@ -308,8 +308,7 @@ def test_read_range_slices_and_fetches_only_covering_blocks(rng):
         sai.write("/f", data)
         for off, ln in [(0, 100), (4096, 4096), (5000, 9000),
                         (10 * 4096, 1000), (0, 1 << 40),
-                        (len(data) - 10, 10), (len(data) + 5, 10),
-                        (3, 0)]:
+                        (len(data) - 10, 10), (3, 0)]:
             assert sai.read_range("/f", off, ln) == data[off:off + ln], \
                 (off, ln)
         gets0 = sum(n.get_count for n in nodes)
@@ -369,6 +368,41 @@ def test_read_range_root_check_covers_cached_blocks(rng):
     mgr.get_blockmap("/f").merkle_root = b"\x00" * 16
     with pytest.raises(IOError):
         sai.read_range("/f", 4096, 4096)         # cache-warm, still caught
+
+
+def test_read_range_eof_edges(rng):
+    """EOF edge cases (ISSUE 5 satellite): offset exactly at EOF and
+    zero-length reads return b'' (no block is fetched), a range ending
+    inside the final partial block returns exactly the partial tail,
+    and an offset strictly past EOF raises ValueError cleanly instead
+    of silently reading empty."""
+    mgr, nodes = make_store(4)
+    eng = CrystalTPU()
+    sai = SAI(mgr, _cfg(), crystal=eng)
+    try:
+        tail = 123                               # final partial block
+        data = rng.integers(0, 256, 3 * 4096 + tail,
+                            dtype=np.uint8).tobytes()
+        sai.write("/f", data)
+        gets0 = sum(n.get_count for n in nodes)
+        assert sai.read_range("/f", len(data), 10) == b""    # at EOF
+        assert sai.read_range("/f", len(data), 0) == b""
+        assert sai.read_range("/f", 100, 0) == b""           # zero len
+        assert sai.read_range("/f", 0, 0) == b""
+        assert sum(n.get_count for n in nodes) == gets0      # no fetch
+        # range ending inside the final partial block
+        assert sai.read_range("/f", 3 * 4096 + 3, 40) == \
+            data[3 * 4096 + 3:3 * 4096 + 43]
+        # range extending past the partial tail clamps to it
+        assert sai.read_range("/f", 3 * 4096, 4096) == data[3 * 4096:]
+        for off in (len(data) + 1, len(data) + 5000, 1 << 40):
+            with pytest.raises(ValueError):
+                sai.read_range("/f", off, 10)
+            with pytest.raises(ValueError):
+                sai.read_range("/f", off, 0)     # past EOF beats len=0
+    finally:
+        sai.close()
+        eng.shutdown()
 
 
 def test_read_range_matches_full_read_across_ca_modes(rng):
