@@ -29,12 +29,14 @@ answers with ``ST_ERROR``.
 from __future__ import annotations
 
 import hashlib
+import heapq
 import hmac
+import math
 import os
 import struct
 import threading
 import time
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 TOKEN_VERSION = 1
 NONCE_BYTES = 16
@@ -114,6 +116,14 @@ class TokenAuthenticator:
         self._secrets = {t: bytes(s) for t, s in secrets.items()}
         self._lock = threading.Lock()
         self._seen: Dict[Tuple[str, bytes], float] = {}   # nonce->expiry
+        # expiry-ordered heap over _seen keys: pruning pops only the
+        # already-expired head instead of scanning the whole cache under
+        # the lock on every open
+        self._expiries: List[Tuple[float, Tuple[str, bytes]]] = []
+        # unknown tenants still pay for a full HMAC against this dummy
+        # secret, so a timing probe on the open path can't distinguish
+        # "tenant exists" from "tenant doesn't"
+        self._decoy = os.urandom(32)
 
     def add_tenant(self, tenant: str, secret: bytes):
         with self._lock:
@@ -130,23 +140,34 @@ class TokenAuthenticator:
             now = time.time()
         tenant, expiry, nonce, sig, body = parse_token(token)
         secret = self._secrets.get(tenant)
-        if secret is None:
-            raise AuthError(f"unknown tenant {tenant!r}")
-        want = hmac.new(secret, body, hashlib.sha256).digest()
-        if not hmac.compare_digest(sig, want):
-            raise AuthError("bad token signature")
+        # always do the HMAC (decoy-keyed for unknown tenants) and share
+        # one error message, so neither timing nor the reply text tells
+        # a prober whether a tenant name exists
+        want = hmac.new(self._decoy if secret is None else secret,
+                        body, hashlib.sha256).digest()
+        if not hmac.compare_digest(sig, want) or secret is None:
+            raise AuthError("unknown tenant or bad token signature")
         if claimed is not None and claimed != tenant:
             raise AuthError(
                 f"token is for tenant {tenant!r}, not {claimed!r}")
+        # the wire expiry is a raw f64: NaN slips past `expiry <= now`
+        # and then stalls the expiry heap at its root forever (inf pins
+        # its cache entry forever) — reject both before caching
+        if not math.isfinite(expiry):
+            raise AuthError("non-finite token expiry")
         if expiry <= now:
             raise AuthError("token expired")
         key = (tenant, nonce)
         with self._lock:
-            if self._seen:
-                dead = [k for k, exp in self._seen.items() if exp <= now]
-                for k in dead:
+            while self._expiries and self._expiries[0][0] <= now:
+                exp, k = heapq.heappop(self._expiries)
+                # the heap may hold a stale entry for a nonce that was
+                # re-recorded with a later expiry; only drop the cache
+                # entry if it really is expired
+                if self._seen.get(k, now + 1.0) <= now:
                     del self._seen[k]
             if key in self._seen:
                 raise AuthError("token replayed (nonce already used)")
             self._seen[key] = expiry
+            heapq.heappush(self._expiries, (expiry, key))
         return tenant

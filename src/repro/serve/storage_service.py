@@ -304,6 +304,8 @@ class GatewayChannel:
         self._gateway = gateway
 
     def request(self, frame: bytes) -> ReplyFuture:
+        # owner=None: in-process callers are trusted and share one
+        # session namespace (sessions bound by OP_OPEN, not channels)
         return self._gateway.handle_frame(frame)
 
     def close(self):
@@ -382,7 +384,12 @@ class StorageGateway:
         self._cv = threading.Condition(self._lock)
         self._tenants: Dict[str, _Tenant] = {}
         self._order: List[_Tenant] = []       # WDRR visit order
-        self._sessions: Dict[int, _Tenant] = {}
+        # session id -> (tenant, owner).  ``owner`` is the opaque
+        # transport identity that opened the session (the socket
+        # connection object; None for trusted in-process callers) —
+        # every later frame must come from the SAME owner, so a TCP
+        # client can't act on a session id it merely guessed.
+        self._sessions: Dict[int, Tuple[_Tenant, Any]] = {}
         self._next_session = 1
         self._rr = 0
         self._closed = False
@@ -423,7 +430,14 @@ class StorageGateway:
         self.close()
 
     # -- frame entry point ---------------------------------------------
-    def handle_frame(self, frame: bytes) -> ReplyFuture:
+    def handle_frame(self, frame: bytes,
+                     owner: Any = None) -> ReplyFuture:
+        """Serve one request frame.  ``owner`` is the transport identity
+        the frame arrived on (the socket transport passes its connection
+        object; in-process callers pass nothing).  Sessions are bound to
+        the owner that opened them — frames naming another owner's
+        session are answered exactly like an unknown session, so session
+        ids carry no authority across connections."""
         reply = ReplyFuture()
         try:
             op, session, rid, f = decode_request(
@@ -441,7 +455,7 @@ class StorageGateway:
                                            msg=str(e)))
             return reply
         try:
-            self._handle(op, session, rid, f, reply)
+            self._handle(op, session, rid, f, reply, owner)
         except BaseException as e:
             reply._resolve(encode_response(ST_ERROR, op, rid,
                                            errtype=type(e).__name__,
@@ -449,18 +463,22 @@ class StorageGateway:
         return reply
 
     def _handle(self, op: int, session: int, rid: int,
-                f: Dict[str, Any], reply: ReplyFuture):
+                f: Dict[str, Any], reply: ReplyFuture, owner: Any):
         with self._cv:
             self.stats["frames"] += 1
         if op == OP_OPEN:
-            return self._open_session(rid, f, reply)
+            return self._open_session(rid, f, reply, owner)
         with self._cv:
-            tenant = self._sessions.get(session)
-        if tenant is None:
+            entry = self._sessions.get(session)
+        # a foreign-owner session gets the SAME reply as a nonexistent
+        # one: a probing connection learns nothing about which small
+        # integer ids happen to be other clients' live sessions
+        if entry is None or entry[1] is not owner:
             reply._resolve(encode_response(
                 ST_ERROR, op, rid, errtype="UnknownSession",
                 msg=f"session {session} is not open"))
             return
+        tenant = entry[0]
         if op == OP_CLOSE:
             with self._cv:
                 self._sessions.pop(session, None)
@@ -477,7 +495,7 @@ class StorageGateway:
                                        msg=f"unhandled opcode {op}"))
 
     def _open_session(self, rid: int, f: Dict[str, Any],
-                      reply: ReplyFuture):
+                      reply: ReplyFuture, owner: Any):
         if self.cfg.auth is not None:
             # authenticate BEFORE anything else: the session's tenant is
             # whatever the verified token says, never the claimed field
@@ -526,8 +544,21 @@ class StorageGateway:
                 self._order.append(tenant)
             sid = self._next_session
             self._next_session += 1
-            self._sessions[sid] = tenant
+            self._sessions[sid] = (tenant, owner)
         reply._resolve(encode_response(ST_OK, OP_OPEN, rid, session=sid))
+
+    def drop_sessions(self, owner: Any) -> int:
+        """Close every session bound to ``owner`` (a disconnecting
+        transport connection): its ids must not stay live — or leak —
+        after the connection that authenticated them is gone.  Returns
+        the number dropped.  In-flight work already dispatched for the
+        tenant completes normally."""
+        with self._cv:
+            dead = [sid for sid, (_t, own) in self._sessions.items()
+                    if own is owner]
+            for sid in dead:
+                del self._sessions[sid]
+        return len(dead)
 
     # -- metadata ops (cheap: served inline, no queueing) --------------
     def _stat(self, tenant: _Tenant, rid: int, f: Dict[str, Any],

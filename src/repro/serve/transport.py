@@ -40,6 +40,7 @@ connection instead of the process.
 from __future__ import annotations
 
 import queue
+import select
 import socket
 import struct
 import threading
@@ -52,6 +53,22 @@ from repro.serve.storage_service import (MAX_FRAME_BYTES, ST_ERROR,
 
 _LEN = struct.Struct("!I")
 
+# per-call non-blocking send flag (Linux/BSD; 0 elsewhere degrades the
+# server writer's abortable send back to a blocking one)
+_MSG_DONTWAIT = getattr(socket, "MSG_DONTWAIT", 0)
+
+if hasattr(select, "poll"):
+    # poll has no FD_SETSIZE ceiling — select.select raises ValueError
+    # for fds >= 1024, which a busy server crosses routinely
+    def _wait_writable(sock: socket.socket, timeout_s: float) -> bool:
+        p = select.poll()
+        p.register(sock.fileno(), select.POLLOUT)
+        return bool(p.poll(timeout_s * 1000.0))
+else:                                             # pragma: no cover
+    def _wait_writable(sock: socket.socket, timeout_s: float) -> bool:
+        _r, w, _x = select.select([], [sock], [], timeout_s)
+        return bool(w)
+
 Address = Union[str, Tuple[str, int]]
 
 
@@ -61,8 +78,16 @@ class FrameError(ConnectionError):
 
 
 def parse_address(address: Address) -> Tuple[str, int]:
+    """``(host, port)`` pass through; strings split on the LAST colon,
+    with IPv6 literals in brackets (``[::1]:8080``).  An unbracketed
+    multi-colon host is rejected rather than guessed at."""
     if isinstance(address, str):
         host, _, port = address.rpartition(":")
+        if host.startswith("[") and host.endswith("]"):
+            host = host[1:-1]
+        elif ":" in host:
+            raise ValueError(
+                f"ambiguous IPv6 address {address!r}; use [host]:port")
         if not host or not port.isdigit():
             raise ValueError(f"bad address {address!r}; want host:port")
         return host, int(port)
@@ -71,20 +96,26 @@ def parse_address(address: Address) -> Tuple[str, int]:
 
 
 def send_frame(sock: socket.socket, frame: bytes,
-               max_frame_bytes: int = MAX_FRAME_BYTES):
+               max_frame_bytes: int = MAX_FRAME_BYTES,
+               sendall=None):
     """Callers must serialize sends per socket (client write lock /
     single server writer thread) — the prefix and body are two writes
-    for large frames, so interleaved senders would corrupt the stream."""
+    for large frames, so interleaved senders would corrupt the stream.
+    ``sendall`` overrides how the bytes go out (the server writer
+    passes its abortable send) without duplicating the framing
+    policy."""
+    if sendall is None:
+        sendall = sock.sendall
     if len(frame) > max_frame_bytes:
         raise FrameError(
             f"refusing to send {len(frame)}-byte frame "
             f"(max_frame_bytes={max_frame_bytes})")
     if len(frame) <= 1 << 16:
-        sock.sendall(_LEN.pack(len(frame)) + frame)
+        sendall(_LEN.pack(len(frame)) + frame)
     else:
         # don't copy a large payload just to prepend 4 bytes
-        sock.sendall(_LEN.pack(len(frame)))
-        sock.sendall(frame)
+        sendall(_LEN.pack(len(frame)))
+        sendall(frame)
 
 
 def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
@@ -232,13 +263,25 @@ class SocketChannel:
 # server
 # ----------------------------------------------------------------------
 class _Connection:
+    # writer send-poll interval: an abort (server close kicking a
+    # connection wedged on a non-draining client) is noticed within
+    # this long even while the peer's receive window is closed
+    SEND_POLL_S = 0.2
+
     def __init__(self, server: "GatewayServer", sock: socket.socket,
                  peer):
         self.server = server
         self.sock = sock
         self.peer = peer
         self.aborted = False           # peer vanished: drain, don't send
-        self.writeq: "queue.Queue" = queue.Queue()
+        # bounded: once max_pipeline replies are queued ahead of the
+        # writer the reader blocks in put() and stops pulling frames off
+        # the socket — TCP flow control pushes back on the client, so a
+        # connection that pipelines requests without draining responses
+        # holds at most max_pipeline reply frames of server memory
+        # instead of growing without bound
+        self.writeq: "queue.Queue" = queue.Queue(
+            maxsize=server.max_pipeline)
         self.reader = threading.Thread(target=self._reader_loop,
                                        daemon=True,
                                        name=f"gw-conn-rx-{peer}")
@@ -257,7 +300,11 @@ class _Connection:
                     break              # writer still drains responses
                 with srv._lock:
                     srv.stats["frames"] += 1
-                self.writeq.put(srv.gateway.handle_frame(frame))
+                # owner=self: sessions opened on this connection are
+                # usable only from this connection — another client
+                # naming the same session id gets UnknownSession
+                self.writeq.put(srv.gateway.handle_frame(frame,
+                                                         owner=self))
         except FrameError:
             # protocol violation (hostile length prefix, EOF mid-frame):
             # stop reading and tell the writer to drain in-flight
@@ -275,12 +322,34 @@ class _Connection:
         finally:
             self.writeq.put(None)
 
+    def _send_abortable(self, data: bytes):
+        """sendall that a concurrent abort (server close) can interrupt:
+        a blocking send() to a client that stopped draining its replies
+        queues the whole buffer before returning and shutdown() cannot
+        wake it, so it would wedge this thread forever.  Instead wait
+        for writability in short slices, checking ``aborted`` between
+        them, and send without blocking (MSG_DONTWAIT where available —
+        a per-call flag, since O_NONBLOCK on a dup'd fd would leak to
+        the reader's shared file description)."""
+        view = memoryview(data)
+        while view:
+            if self.aborted:
+                raise OSError("connection aborted during send")
+            if not _wait_writable(self.sock, self.SEND_POLL_S):
+                continue
+            try:
+                view = view[self.sock.send(view, _MSG_DONTWAIT):]
+            except BlockingIOError:
+                continue               # lost the race for buffer space
+
     def _writer_loop(self):
         srv = self.server
+        got_sentinel = False
         try:
             while True:
                 reply = self.writeq.get()
                 if reply is None:
+                    got_sentinel = True
                     break
                 try:
                     frame = reply.result(timeout=srv.reply_timeout_s)
@@ -292,7 +361,8 @@ class _Connection:
                 if self.aborted:
                     continue           # keep draining futures
                 try:
-                    send_frame(self.sock, frame, srv.max_frame_bytes)
+                    send_frame(self.sock, frame, srv.max_frame_bytes,
+                               sendall=self._send_abortable)
                 except OSError:
                     self.aborted = True
         finally:
@@ -301,6 +371,16 @@ class _Connection:
                 self.sock.close()
             except OSError:
                 pass
+            # on a timeout/abort exit the bounded writeq may still be
+            # full with the reader blocked in put(); keep consuming
+            # until the reader's sentinel so it can observe the closed
+            # socket and exit instead of hanging forever
+            while not got_sentinel:
+                got_sentinel = self.writeq.get() is None
+            # the connection's sessions die with it — the ids must not
+            # stay live in the gateway table after the authenticated
+            # connection is gone
+            srv.gateway.drop_sessions(self)
             srv._forget(self)
 
     def half_close(self, read: bool = True):
@@ -324,25 +404,53 @@ class GatewayServer:
     like ``GatewayClient(gateway, ...)``.  The server owns its
     connections but NOT the gateway (callers may front one gateway
     with several listeners, or keep serving in-process clients).
+
+    Sessions are connection-scoped: each frame is handled with its
+    connection as the session owner, so a session id opened on one
+    connection is dead weight on every other — guessing another
+    client's (small, sequential) session id gets ``UnknownSession``,
+    and a connection's sessions are dropped when it goes away.
     """
 
     def __init__(self, gateway: StorageGateway, host: str = "127.0.0.1",
                  port: int = 0,
                  max_frame_bytes: Optional[int] = None,
-                 backlog: int = 64, reply_timeout_s: float = 600.0):
+                 backlog: int = 64, reply_timeout_s: float = 600.0,
+                 max_pipeline: int = 32):
         self.gateway = gateway
         self.max_frame_bytes = (gateway.cfg.max_frame_bytes
                                 if max_frame_bytes is None
                                 else max_frame_bytes)
         self.reply_timeout_s = reply_timeout_s
+        # per-connection cap on replies queued ahead of the writer; the
+        # worst case a non-draining client can pin is roughly
+        # max_pipeline * max_frame_bytes of this server's memory
+        if max_pipeline < 1:
+            raise ValueError("max_pipeline must be >= 1")
+        self.max_pipeline = max_pipeline
         self._lock = threading.Lock()
         self._conns: set = set()
         self._closed = False
         self.stats = {"connections": 0, "frames": 0, "frame_errors": 0,
                       "disconnects": 0}
-        self._lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        # resolve the bind family from the host (AF_INET6 for IPv6
+        # literals/names) instead of hard-coding AF_INET; "" means
+        # wildcard, which getaddrinfo only understands as None
+        family, _, _, _, sockaddr = socket.getaddrinfo(
+            host or None, port, type=socket.SOCK_STREAM,
+            flags=socket.AI_PASSIVE)[0]
+        self._lsock = socket.socket(family, socket.SOCK_STREAM)
         self._lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
-        self._lsock.bind((host, port))
+        if family == socket.AF_INET6:
+            # dual-stack where the platform allows it: a wildcard or
+            # hostname bind that resolved to v6 must not silently stop
+            # serving IPv4 clients (v6only defaults vary by platform)
+            try:
+                self._lsock.setsockopt(socket.IPPROTO_IPV6,
+                                       socket.IPV6_V6ONLY, 0)
+            except (OSError, AttributeError):
+                pass
+        self._lsock.bind(sockaddr)
         self._lsock.listen(backlog)
         self.address: Tuple[str, int] = self._lsock.getsockname()[:2]
         self._acceptor = threading.Thread(target=self._accept_loop,
@@ -403,3 +511,18 @@ class GatewayServer:
             conn.half_close(read=True)
         for conn in conns:
             conn.join(timeout_s)
+            if conn.reader.is_alive() or conn.writer.is_alive():
+                # the graceful drain didn't finish — e.g. the writer is
+                # wedged sending to a client that pipelined big reads
+                # and stopped draining (which also wedges the reader in
+                # the bounded writeq).  Flag the abort: the writer's
+                # send loop polls it (SEND_POLL_S), switches to
+                # draining, and runs the teardown (session drop,
+                # _forget); shutdown is a backstop for a reader still
+                # blocked in recv.
+                conn.aborted = True
+                try:
+                    conn.sock.shutdown(socket.SHUT_RDWR)
+                except OSError:
+                    pass
+                conn.join(timeout_s)

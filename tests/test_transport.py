@@ -25,15 +25,17 @@ from repro.serve.auth import (AuthError, TokenAuthenticator, mint_token,
 from repro.serve.storage_client import GatewayClient, RetryLater
 from repro.serve.storage_service import GatewayConfig, StorageGateway
 from repro.serve.transport import (FrameError, GatewayServer,
-                                   SocketChannel, recv_frame, send_frame)
+                                   SocketChannel, parse_address,
+                                   recv_frame, send_frame)
 
 SECRETS = {"acme": b"acme-secret", "globex": b"globex-secret",
            "t0": b"s0", "t1": b"s1", "t2": b"s2", "t3": b"s3"}
 
 
 def _sai_cfg(**kw):
-    return SAIConfig(ca="fixed", hasher="tpu", block_size=4096,
-                     avg_chunk=4096, min_chunk=1024, max_chunk=16384, **kw)
+    kw.setdefault("hasher", "tpu")
+    return SAIConfig(ca="fixed", block_size=4096, avg_chunk=4096,
+                     min_chunk=1024, max_chunk=16384, **kw)
 
 
 def _served(mgr, engine, auth=True, **kw):
@@ -72,6 +74,50 @@ def test_stream_framing_roundtrip_and_hostile_prefix():
                 s.close()
             except OSError:
                 pass
+
+
+def test_parse_address_forms():
+    assert parse_address("127.0.0.1:8080") == ("127.0.0.1", 8080)
+    assert parse_address("localhost:80") == ("localhost", 80)
+    assert parse_address(("h", 1)) == ("h", 1)
+    assert parse_address("[::1]:8080") == ("::1", 8080)
+    assert parse_address("[fe80::1]:80") == ("fe80::1", 80)
+    for bad in ("::1:8080",       # ambiguous unbracketed IPv6
+                "nohost", ":80", "h:", "h:not-a-port", "[::1]"):
+        with pytest.raises(ValueError):
+            parse_address(bad)
+
+
+def _ipv6_loopback_ok():
+    if not socket.has_ipv6:
+        return False
+    try:
+        s = socket.socket(socket.AF_INET6, socket.SOCK_STREAM)
+        s.bind(("::1", 0))
+        s.close()
+        return True
+    except OSError:
+        return False
+
+
+@pytest.mark.skipif(not _ipv6_loopback_ok(),
+                    reason="no IPv6 loopback on this host")
+def test_server_serves_ipv6_loopback(rng):
+    mgr, _ = make_store(4)
+    eng = CrystalTPU()
+    gw = StorageGateway(mgr, engine=eng,
+                        config=GatewayConfig(sai=_sai_cfg()))
+    server = GatewayServer(gw, host="::1")
+    try:
+        blob = rng.integers(0, 256, 4096, dtype=np.uint8).tobytes()
+        client = GatewayClient(f"[::1]:{server.address[1]}", "six")
+        client.write("/v6", blob)
+        assert client.read("/v6") == blob
+        client.close()
+    finally:
+        server.close()
+        gw.close()
+        eng.shutdown()
 
 
 def test_recv_frame_clean_eof_is_none():
@@ -234,6 +280,255 @@ def test_gateway_rejects_bad_open_tokens_over_socket(rng):
         server.close()
         gw.close()
         eng.shutdown()
+
+
+def test_session_ids_are_connection_scoped(rng):
+    """A session opened (and authenticated) on one connection is
+    worthless on every other: a raw TCP client naming the victim's
+    session id gets UnknownSession for reads, writes, deletes, AND
+    close — it can neither touch the victim's data, bill traffic to
+    its tenant, nor kill its session."""
+    mgr, _ = make_store(4)
+    eng = CrystalTPU()
+    gw, server = _served(mgr, eng)                 # auth enforced
+    try:
+        victim = GatewayClient(server, "acme", secret=SECRETS["acme"])
+        blob = rng.integers(0, 256, 2 * 4096, dtype=np.uint8).tobytes()
+        victim.write("/secret", blob)
+        sid = victim._session
+        probe = socket.create_connection(server.address, timeout=10)
+        attempts = [
+            (svc.OP_READ, dict(path="/secret", version=-1, verify=True)),
+            (svc.OP_WRITE, dict(path="/evil", data=b"x" * 64)),
+            (svc.OP_DELETE, dict(path="/secret")),
+            (svc.OP_STAT, dict(path="/secret")),
+            (svc.OP_CLOSE, {}),
+        ]
+        # the forger never authenticated, yet probes the victim's sid
+        # and a spread of guesses around it
+        for rid, (op, fields) in enumerate(attempts, start=1):
+            send_frame(probe, svc.encode_request(op, sid, rid, **fields))
+            status, _op, _rid, f = svc.decode_response(recv_frame(probe))
+            assert status == svc.ST_ERROR
+            assert f["errtype"] == "UnknownSession"
+        for guess in (0, 1, 2, sid + 1):
+            send_frame(probe, svc.encode_request(
+                svc.OP_STAT, guess, 99, path="/secret"))
+            status, _op, _rid, f = svc.decode_response(recv_frame(probe))
+            assert status == svc.ST_ERROR
+            assert f["errtype"] == "UnknownSession"
+        probe.close()
+        # the hijack attempts neither closed the victim's session nor
+        # touched its data
+        assert victim.read("/secret") == blob
+        assert victim.stat("/secret")["total_len"] == len(blob)
+        victim.close()
+    finally:
+        server.close()
+        gw.close()
+        eng.shutdown()
+
+
+def test_disconnect_drops_connection_sessions(rng):
+    """A connection's sessions are removed from the gateway table when
+    the connection goes away (graceful or abrupt) — ids don't pile up
+    or stay live after the socket that authenticated them is gone."""
+    mgr, _ = make_store(4)
+    eng = CrystalTPU()
+    gw, server = _served(mgr, eng, auth=False)
+    try:
+        sock = socket.create_connection(server.address, timeout=10)
+        send_frame(sock, svc.encode_request(
+            svc.OP_OPEN, 0, 1, tenant="gone", qos="interactive",
+            weight=1.0))
+        status, _op, _rid, f = svc.decode_response(recv_frame(sock))
+        assert status == svc.ST_OK
+        assert gw.snapshot_stats()["sessions"] == 1
+        sock.close()                    # vanish without OP_CLOSE
+        deadline = time.time() + 30
+        while gw.snapshot_stats()["sessions"] and time.time() < deadline:
+            time.sleep(0.01)
+        assert gw.snapshot_stats()["sessions"] == 0
+    finally:
+        server.close()
+        gw.close()
+        eng.shutdown()
+
+
+def test_pipelined_client_that_never_drains_is_bounded(rng):
+    """The per-connection reply queue is bounded: a client that
+    pipelines far more requests than max_pipeline without reading a
+    single response stalls the reader (TCP backpressure) instead of
+    growing server memory; once it finally drains, every reply
+    arrives."""
+    mgr, _ = make_store(4)
+    eng = CrystalTPU()
+    gw = StorageGateway(mgr, engine=eng,
+                        config=GatewayConfig(sai=_sai_cfg()))
+    server = GatewayServer(gw, max_pipeline=2)
+    try:
+        seed = GatewayClient(gw, "seed")
+        blob = rng.integers(0, 256, 4096, dtype=np.uint8).tobytes()
+        seed.write("/pre", blob)
+        seed.close()
+        sock = socket.create_connection(server.address, timeout=10)
+        send_frame(sock, svc.encode_request(
+            svc.OP_OPEN, 0, 1, tenant="flood", qos="interactive",
+            weight=1.0))
+        _status, _op, _rid, f = svc.decode_response(recv_frame(sock))
+        sid = f["session"]
+        n = 24                          # >> max_pipeline
+        for rid in range(2, 2 + n):
+            send_frame(sock, svc.encode_request(svc.OP_STAT, sid, rid,
+                                                path="/pre"))
+        time.sleep(0.2)                 # let replies pile up server-side
+        rids = set()
+        for _ in range(n):
+            status, _op, rid, _f = svc.decode_response(recv_frame(sock))
+            assert status == svc.ST_OK
+            rids.add(rid)
+        assert rids == set(range(2, 2 + n))
+        sock.close()
+        with pytest.raises(ValueError):
+            GatewayServer(gw, max_pipeline=0)
+    finally:
+        server.close()
+        gw.close()
+        eng.shutdown()
+
+
+def test_server_wildcard_bind_roundtrip(rng):
+    """host='' (the bind-all idiom) still constructs and serves."""
+    mgr, _ = make_store(4)
+    eng = CrystalTPU()
+    gw = StorageGateway(mgr, engine=eng,
+                        config=GatewayConfig(sai=_sai_cfg()))
+    server = GatewayServer(gw, host="")
+    try:
+        blob = rng.integers(0, 256, 4096, dtype=np.uint8).tobytes()
+        client = GatewayClient(("127.0.0.1", server.address[1]), "any")
+        client.write("/w", blob)
+        assert client.read("/w") == blob
+        client.close()
+    finally:
+        server.close()
+        gw.close()
+        eng.shutdown()
+
+
+class _StuckGateway:
+    """handle_frame returns futures that never resolve — forces the
+    connection writer's reply_timeout_s abort path."""
+
+    def handle_frame(self, frame, owner=None):
+        return svc.ReplyFuture()
+
+    def drop_sessions(self, owner):
+        return 0
+
+
+def test_writer_timeout_abort_unwedges_blocked_reader():
+    """When a gateway reply never resolves, the writer's timeout abort
+    must drain the bounded writeq so the reader (blocked in put())
+    exits and the connection tears down — not wedge the thread and
+    pin max_pipeline replies forever."""
+    server = GatewayServer(_StuckGateway(), max_frame_bytes=1 << 20,
+                           reply_timeout_s=0.3, max_pipeline=2)
+    try:
+        sock = socket.create_connection(server.address, timeout=10)
+        for rid in range(1, 9):         # >> max_pipeline: reader blocks
+            send_frame(sock, svc.encode_request(svc.OP_STAT, 1, rid,
+                                                path="/x"))
+        deadline = time.time() + 30
+        while server.snapshot_stats()["open_connections"] \
+                and time.time() < deadline:
+            time.sleep(0.01)
+        assert server.snapshot_stats()["open_connections"] == 0
+        sock.close()
+    finally:
+        server.close(timeout_s=10)
+
+
+def test_close_reclaims_connection_wedged_on_nondraining_client(rng):
+    """A client that pipelines big reads and stops draining leaves the
+    writer stuck in sendall (reply frames >> socket buffers) and the
+    reader stuck in the bounded writeq — server.close() must abort the
+    socket, reclaim both threads, and drop the session anyway."""
+    mgr, _ = make_store(4)
+    eng = CrystalTPU()
+    gw = StorageGateway(mgr, engine=eng, config=GatewayConfig(
+        sai=_sai_cfg(hasher="cpu")))
+    server = GatewayServer(gw, max_pipeline=2)
+    try:
+        blob = rng.integers(0, 256, 4 << 20, dtype=np.uint8).tobytes()
+        seed = GatewayClient(gw, "seed")
+        seed.write("/big", blob)
+        seed.close()
+        sock = socket.create_connection(server.address, timeout=10)
+        send_frame(sock, svc.encode_request(
+            svc.OP_OPEN, 0, 1, tenant="wedge", qos="interactive",
+            weight=1.0))
+        _status, _op, _rid, f = svc.decode_response(recv_frame(sock))
+        sid = f["session"]
+        for rid in range(2, 8):        # 4 MiB replies, never drained
+            send_frame(sock, svc.encode_request(
+                svc.OP_READ, sid, rid, path="/big", version=-1,
+                verify=True))
+        time.sleep(1.0)                # let the writer wedge in sendall
+        server.close(timeout_s=2.0)    # must abort, not hang forever
+        assert server.snapshot_stats()["open_connections"] == 0
+        assert gw.snapshot_stats()["sessions"] == 0
+        sock.close()
+    finally:
+        server.close()
+        gw.close()
+        eng.shutdown()
+
+
+def test_auth_rejects_nonfinite_expiry():
+    """A hand-packed token with NaN/inf expiry must be rejected: NaN
+    slips past `expiry <= now` and a NaN entry at the expiry-heap root
+    would stall replay-cache pruning for every tenant (inf pins its
+    entry forever)."""
+    import hashlib
+    import hmac as hmac_mod
+
+    from repro.serve import auth as auth_mod
+
+    gate = TokenAuthenticator({"acme": b"k"})
+    for expiry in (float("nan"), float("inf")):
+        body = auth_mod._signed_body(b"acme", expiry, b"e" * 16)
+        tok = body + hmac_mod.new(b"k", body,
+                                  hashlib.sha256).digest()
+        with pytest.raises(AuthError):
+            gate.verify(tok, now=1000.0)
+    assert not gate._seen and not gate._expiries    # nothing cached
+
+
+def test_auth_nonce_cache_prunes_and_hides_tenant_existence():
+    """The replay cache forgets expired nonces (heap-amortized prune),
+    and the unknown-tenant rejection neither names the probed tenant
+    nor differs from a bad-signature rejection."""
+    gate = TokenAuthenticator({"acme": b"k"})
+    tok = mint_token("acme", b"k", ttl_s=5.0, now=1000.0,
+                     nonce=b"n" * 16)
+    assert gate.verify(tok, now=1001.0) == "acme"
+    with pytest.raises(AuthError):              # replay inside window
+        gate.verify(tok, now=1002.0)
+    # same nonce in a FRESH token long after expiry: the stale cache
+    # entry was pruned, so this is accepted (and the cache stays at
+    # one live entry, not one per open ever made)
+    tok2 = mint_token("acme", b"k", ttl_s=5.0, now=2000.0,
+                      nonce=b"n" * 16)
+    assert gate.verify(tok2, now=2001.0) == "acme"
+    assert len(gate._seen) == 1
+    assert len(gate._expiries) == 1
+    with pytest.raises(AuthError) as unknown:
+        gate.verify(mint_token("nobody", b"x"), now=1000.0)
+    assert "nobody" not in str(unknown.value)
+    with pytest.raises(AuthError) as forged:
+        gate.verify(mint_token("acme", b"wrong"), now=1000.0)
+    assert str(forged.value) == str(unknown.value)
 
 
 def test_inprocess_gateway_with_auth_and_without(rng):
