@@ -1,6 +1,6 @@
 PYTHON ?= python
 
-.PHONY: test test-fast dev-deps bench bench-smoke
+.PHONY: test test-fast dev-deps bench bench-smoke bench-mesh-smoke
 
 dev-deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -25,5 +25,18 @@ bench:
 bench-smoke:
 	BENCH_SMOKE=1 BENCH_JSON=BENCH_smoke.json PYTHONPATH=src:. \
 		$(PYTHON) benchmarks/run.py \
-		fig4 fig11 read scrub gateway > bench-smoke.csv
+		fig4 fig11 read scrub gateway mesh > bench-smoke.csv
 	@cat bench-smoke.csv
+
+# engine-mesh ablation alone (1 vs 4 forced host devices, static vs
+# adaptive fusion); asserts the mesh rows actually landed in the CSV
+bench-mesh-smoke:
+	BENCH_SMOKE=1 BENCH_JSON=BENCH_mesh.json PYTHONPATH=src:. \
+		$(PYTHON) benchmarks/run.py mesh > bench-mesh.csv
+	@cat bench-mesh.csv
+	@grep -q '^mesh/whale_1dev,' bench-mesh.csv
+	@grep -q '^mesh/whale_4dev_sharded,' bench-mesh.csv
+	@grep -q '^mesh/fusion_static,' bench-mesh.csv
+	@grep -q '^mesh/fusion_adaptive,' bench-mesh.csv
+	@grep -q '^mesh/device_' bench-mesh.csv
+	@grep -q '^mesh/digest_ok,0.0,ok=1' bench-mesh.csv

@@ -7,8 +7,10 @@ weight) and pushes a burst of framed writes, then reads one file back
 verified.  All tenants' hash traffic funnels through ONE shared engine,
 so the run reports the cross-client coalescing signature —
 ``engine launches < client requests`` — alongside per-tenant throughput
-rows (``gateway/tenant_*``; the CI smoke asserts these are emitted) and
-a fairness row (min/max tenant throughput ratio; 1.0 = perfectly fair).
+rows (``gateway/tenant_*``; the CI smoke asserts these are emitted),
+per-device engine-mesh rows (``gateway/engine_device*`` — jobs,
+launches, bytes, EWMA launch latency per device), and a fairness row
+(min/max tenant throughput ratio; 1.0 = perfectly fair).
 Admission rejections ride along: a saturated run backpressures instead
 of queueing without bound.
 
@@ -83,6 +85,7 @@ def run() -> list:
             t.join(timeout=600)
         elapsed = time.perf_counter() - t0
         stats = gw.snapshot_stats()
+        eng_stats = engine.snapshot_stats()
         gw.close()
         engine.shutdown()
         assert not errors, errors
@@ -106,6 +109,12 @@ def run() -> list:
                      float(stats["jobs"]),
                      f"launches={stats['launches']}_requests={requests}_"
                      f"rejections={stats['admission_rejections']}"))
+        for i, ds in sorted(eng_stats["per_device"].items()):
+            rows.append((
+                f"gateway/engine_device{i}/{n_clients}c",
+                ds["ewma_launch_s"] * 1e6,
+                f"jobs={ds['jobs']}_launches={ds['launches']}_"
+                f"bytes={ds['bytes']}_queue_depth={ds['queue_depth']}"))
         if rates:
             fair = min(rates.values()) / max(max(rates.values()), 1e-9)
             rows.append((f"gateway/fairness/{n_clients}c", fair * 1e6,

@@ -31,6 +31,7 @@ MODULES = [
     "benchmarks.read_path",
     "benchmarks.scrub_interference",
     "benchmarks.gateway_saturation",
+    "benchmarks.engine_mesh",
     "benchmarks.fig12_17_competing",
     "benchmarks.sec4_2_cpu_vs_accel",
     "benchmarks.kernel_roofline",

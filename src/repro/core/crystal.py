@@ -7,7 +7,10 @@ offload pay off:
                        a stream of hashing jobs,
   (2) transfer/compute overlap — pipeline H2D copy of job i+1 with the
                        kernel of job i,
-  (3) transparent multi-device — round-robin dispatch over all devices,
+  (3) transparent multi-device — an *engine mesh*: every device owns a
+                       manager thread and a private lane queue, and jobs
+                       are placed by a load-aware dispatch score instead
+                       of blind round-robin,
   (4) request coalescing — fuse many small outstanding hash requests
                        (concurrent writers, checkpoint leaves, read-path
                        verification) into ONE padded batch kernel launch,
@@ -15,29 +18,64 @@ offload pay off:
                        burst.  This covers every job kind: ``direct``
                        rows stack into one [B, W] batch, and bursts of
                        same-config ``sliding`` / ``gear`` stream jobs
-                       (CDC chunking bursts: checkpoint restore, many
-                       concurrent writers) stack into one padded [B, L]
-                       multi-row launch via the ``ops.*_batch_device``
-                       entry points.
+                       stack into one padded [B, L] multi-row launch via
+                       the ``ops.*_batch_device`` entry points.
 
-Engine structure (same master/manager-thread/queue design as CrystalGPU):
-an idle queue of preallocated job slots, an outstanding queue of submitted
-jobs, one manager thread per device, and completion callbacks.  Each
-manager drains the outstanding queue: it takes one job, then greedily
-pulls every further queued job with the same fuse key — ``direct`` with
-``direct``, ``sliding`` with identical window/stride, ``gear`` with
-``gear`` — (plus stragglers within ``coalesce_window_s``) and executes
-the whole batch as a single kernel launch, slicing each job's rows out
-of the fused phase-matrix output.  Batch row counts and padded widths
-are bucketed to powers of two to bound jit retraces across ragged
-bursts.  ``stats["launches"] < stats["jobs"]`` is the signature of a
-fused burst.
+Engine mesh (this module's multi-device structure):
+
+  dispatch   — each submitted job carries a cost estimate from the
+               :class:`KernelCostModel` (seconds ~ overhead +
+               sec_per_byte * padded_bytes, seeded from the roofline
+               hash-kernel constants in ``repro.roofline.analysis`` and
+               EWMA-regressed online from measured launch wall times).
+               The dispatcher scores every device by
+               ``pending_s * slowdown`` — its queued model-seconds
+               backlog times an EWMA of observed-vs-estimated launch
+               latency — and routes to the cheapest device, with a
+               fuse-key affinity exception: a job whose fuse key matches
+               a device's most recent submission lands there when that
+               device's backlog is within one job-cost of the best, so
+               coalescable bursts stay fused instead of spraying across
+               the mesh.  Ties break round-robin.
+  sharding   — a whale job (padded staging footprint >=
+               ``shard_min_bytes`` with >= 2 devices) is split into
+               per-device sub-launches via the pure planning helpers in
+               ``ops`` (``shard_row_ranges`` for direct row ranges,
+               ``stream_shard_plan`` for stride-aligned sliding slices
+               and 32-byte-overlap gear slices) and the child digests
+               are reassembled in submission order into the parent
+               job's result — one whale checkpoint leaf no longer
+               serializes on a single manager while other devices idle.
+               Counted by ``sharded_jobs`` / ``shards``.
+  adaptive   — with ``adaptive_fusion=True`` the :class:`FusionPolicy`
+    fusion     retunes ``max_fused_rows`` / ``max_fused_bytes`` from
+               the measured cost model (grow the fused batch until
+               launch overhead is ~25% of the launch, shrink it when
+               the latency target ``target_launch_s`` binds) and widens
+               or narrows the stream octave-class span when launches
+               are overhead-dominated or padding-wasteful.  The
+               constructor caps act as the starting point; adapted
+               values stay within a bounded window around them and are
+               exposed via ``snapshot_stats()["policy"]``.
+  resilience — a manager thread that dies on an unexpected exception no
+               longer strands its queue: the in-flight (picked) jobs'
+               futures fail with the exception, the still-queued jobs
+               are re-dispatched to surviving devices, the manager loop
+               restarts, and ``manager_restarts`` counts the event.
+
+``snapshot_stats()`` exposes the flat engine counters plus
+``per_device`` (jobs, launches, bytes, EWMA launch latency overall and
+per ``(kind, width-bucket)``, queue depth, queued padded bytes, pending
+model-seconds, slowdown, restarts), ``policy`` (current caps + octave
+span), and ``sharded_jobs`` / ``shards`` / ``manager_restarts``.
+``queue_depth(lane, device=...)`` reads one device's backlog;
+without ``device`` it sums the mesh (the node runtime's scrub backoff
+and the gateway read it).
 
 Data stays device-resident from ``device_put`` through the kernel: hosts
 prepare word-packed staging buffers, the device buffer is handed straight
 to the jit'd kernel entry points (``ops.*_device``), and only the (small)
-digest/fingerprint output is pulled back to the host — the seed's
-``np.asarray(dev_buf)`` host round-trip before every launch is gone.
+digest/fingerprint output is pulled back to the host.
 
 TPU/JAX adaptation: JAX's runtime is asynchronous by design, so overlap is
 expressed by *not* synchronizing between stage boundaries (async dispatch
@@ -66,7 +104,7 @@ import queue
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -161,12 +199,20 @@ class Job:                             # numpy fields, and the manager's
     # the fused matrix is (sum n_rows) x (max staged_width) bytes
     n_rows: int = 1
     staged_width: int = 0
+    # cost-model estimate charged to the dispatch target's backlog
+    # clock at submit and credited back when the launch retires
+    cost_est: float = 0.0
+    device_index: int = -1
 
     def wait(self):
         self.done.wait()
         if self.error is not None:
             raise self.error
         return self.result
+
+    @property
+    def padded_bytes(self) -> int:
+        return self.n_rows * max(self.staged_width, 1)
 
 
 def _normalize_direct(data: np.ndarray, meta: Dict[str, Any]):
@@ -191,13 +237,223 @@ def _normalize_direct(data: np.ndarray, meta: Dict[str, Any]):
     return rows, lens
 
 
+def _cost_seeds() -> Dict[str, Tuple[float, float]]:
+    """kind -> (sec_per_byte, launch_overhead_s) seeds for the cost
+    model, derived from the roofline hash-kernel op counts; a static
+    fallback keeps the engine importable if the roofline package is
+    unavailable (stripped deployments)."""
+    try:
+        from repro.roofline.analysis import HASH_OPS_PER_BYTE, \
+            hash_cost_seed
+        out = {}
+        for kind in HASH_OPS_PER_BYTE:
+            s = hash_cost_seed(kind)
+            out[kind] = (s["sec_per_byte"], s["launch_overhead_s"])
+        return out
+    except Exception:
+        return {k: (5e-8, 2e-3) for k in ("direct", "sliding", "gear")}
+
+
+class KernelCostModel:
+    """Online launch-cost model: ``wall ~= overhead + sec_per_byte *
+    padded_bytes`` per job kind.  Parameters come from an EWMA linear
+    regression of measured launch wall time on padded staging bytes,
+    seeded from the roofline kernel-cost constants so the very first
+    dispatch decisions are already scale-aware.  When the observed byte
+    sizes are degenerate (every launch the same size) the slope falls
+    back to the seed and only the intercept is measured."""
+
+    def __init__(self, seeds: Optional[Dict[str, Tuple[float, float]]]
+                 = None, alpha: float = 0.2):
+        self.alpha = alpha
+        self._seed = dict(seeds or {})
+        # kind -> [n, E[b], E[w], E[b^2], E[b*w]]  (EWMA moments)
+        self._m: Dict[str, List[float]] = {}
+
+    def observe(self, kind: str, nbytes: int, wall_s: float):
+        b, w = float(nbytes), float(wall_s)
+        m = self._m.get(kind)
+        if m is None:
+            self._m[kind] = [1, b, w, b * b, b * w]
+            return
+        a = self.alpha
+        m[0] += 1
+        m[1] += a * (b - m[1])
+        m[2] += a * (w - m[2])
+        m[3] += a * (b * b - m[3])
+        m[4] += a * (b * w - m[4])
+
+    def params(self, kind: str) -> Tuple[float, float]:
+        """(overhead_s, sec_per_byte) for ``kind``."""
+        seed_spb, seed_oh = self._seed.get(kind, (5e-8, 2e-3))
+        m = self._m.get(kind)
+        if m is None or m[0] < 2:
+            return seed_oh, seed_spb
+        var = m[3] - m[1] * m[1]
+        cov = m[4] - m[1] * m[2]
+        if var <= max(1e-6 * m[3], 1e-9):
+            spb = seed_spb                  # degenerate byte variance
+        else:
+            spb = cov / var
+        spb = min(max(spb, 1e-13), 1.0)
+        oh = max(m[2] - spb * m[1], 0.0)
+        return oh, spb
+
+    def estimate(self, kind: str, nbytes: int) -> float:
+        oh, spb = self.params(kind)
+        return oh + spb * float(nbytes)
+
+    def snapshot(self) -> Dict[str, Dict[str, float]]:
+        out = {}
+        for kind in set(self._seed) | set(self._m):
+            oh, spb = self.params(kind)
+            out[kind] = {"overhead_s": oh, "sec_per_byte": spb,
+                         "observations": self._m.get(kind, [0])[0]}
+        return out
+
+
+class FusionPolicy:
+    """Fusion caps + stream octave classes, optionally retuned online.
+
+    Static mode (``adaptive=False``, the default): ``cur_rows`` /
+    ``cur_bytes`` stay at the constructor values — existing engines
+    behave exactly as before.  Adaptive mode grows the fused-batch byte
+    budget until launch overhead is ~25% of the modeled launch time
+    (``B_opt = 3 * overhead / sec_per_byte``), shrinks it when the
+    ``target_launch_s`` latency bound binds, rounds to a power of two
+    with 2x hysteresis, and keeps the result inside a bounded window
+    around the configured caps (so explicit small caps remain
+    meaningful bounds).  The row cap follows from the byte budget and
+    the EWMA padded-bytes-per-row of recent launches.
+
+    The stream octave class is the true power-of-two octave
+    ``size.bit_length() // octave_span`` (span 1 = one class per
+    power of two); adaptive mode widens the span (fuse across more
+    size octaves) when launches are overhead-dominated and padding is
+    cheap, and narrows it when padding waste dominates."""
+
+    def __init__(self, max_fused_rows: int, max_fused_bytes: int,
+                 adaptive: bool = False, target_launch_s: float = 0.25,
+                 octave_span: int = 1):
+        self.adaptive = bool(adaptive)
+        self.target_launch_s = float(target_launch_s)
+        self.base_rows = max(1, int(max_fused_rows))
+        self.base_bytes = max(1, int(max_fused_bytes))
+        self.cur_rows = self.base_rows
+        self.cur_bytes = self.base_bytes
+        self.rows_floor = max(1, self.base_rows // 8)
+        self.rows_ceil = self.base_rows * 8
+        self.bytes_floor = max(4096, self.base_bytes // 64)
+        self.bytes_ceil = self.base_bytes * 8
+        self.octave_span = max(1, min(int(octave_span), 3))
+        self._pad_ratio = 1.0
+        self._row_bytes = 0.0
+        self._wall = 0.0
+        self._obs = 0
+
+    def octave_class(self, size: int) -> int:
+        return max(int(size), 1).bit_length() // self.octave_span
+
+    def observe(self, padded: int, actual: int, n_rows: int,
+                wall_s: float, overhead_s: float, sec_per_byte: float):
+        """Feed one retired launch (caller holds the engine lock)."""
+        a = 0.25
+        self._pad_ratio += a * (padded / max(actual, 1) - self._pad_ratio)
+        if n_rows:
+            rb = padded / n_rows
+            self._row_bytes = rb if not self._row_bytes \
+                else self._row_bytes + a * (rb - self._row_bytes)
+        self._wall = wall_s if not self._wall \
+            else self._wall + a * (wall_s - self._wall)
+        self._obs += 1
+        if not self.adaptive:
+            return
+        spb = max(sec_per_byte, 1e-13)
+        oh = max(overhead_s, 0.0)
+        want = 3.0 * oh / spb            # overhead down to ~25%/launch
+        if self.target_launch_s > oh:
+            want = min(want, (self.target_launch_s - oh) / spb)
+        want = min(max(want, self.bytes_floor), self.bytes_ceil)
+        want = 1 << (max(int(want), 1) - 1).bit_length()
+        want = min(want, self.bytes_ceil)
+        if want >= 2 * self.cur_bytes or 2 * want <= self.cur_bytes:
+            self.cur_bytes = want        # 2x hysteresis
+        rb = max(self._row_bytes, 64.0)
+        n = min(max(int(self.cur_bytes / rb), self.rows_floor),
+                self.rows_ceil)
+        self.cur_rows = min(1 << (max(n, 1) - 1).bit_length(),
+                            self.rows_ceil)
+        if self._obs % 16 == 0:
+            body = spb * max(self.cur_bytes, 1)
+            if oh > body and self._pad_ratio < 4.0:
+                self.octave_span = min(self.octave_span + 1, 3)
+            elif self._pad_ratio > 6.0 and self.octave_span > 1:
+                self.octave_span -= 1
+
+    def snapshot(self) -> Dict[str, float]:
+        return {"adaptive": int(self.adaptive),
+                "max_fused_rows": self.cur_rows,
+                "max_fused_bytes": self.cur_bytes,
+                "octave_span": self.octave_span,
+                "pad_ratio": self._pad_ratio,
+                "ewma_launch_s": self._wall}
+
+
+class _DeviceState:
+    """Per-device mesh state: a private lane queue, the backlog signals
+    the dispatcher scores (queued padded bytes + pending model-seconds +
+    EWMA observed/estimated slowdown), the picked list crash recovery
+    fails over, and per-(kind, width-bucket) launch-latency EWMAs.
+    Mutable fields are guarded by the engine lock; the queue has its own
+    condition variable (never acquired while holding the engine lock in
+    a blocking wait)."""
+
+    __slots__ = ("index", "device", "queue", "queued_bytes", "pending_s",
+                 "slowdown", "last_fuse_key", "picked", "ewma_launch_s",
+                 "ewma_bucket_s", "jobs", "launches", "bytes", "restarts")
+
+    def __init__(self, index: int, device):
+        self.index = index
+        self.device = device
+        self.queue = LaneQueue()
+        self.queued_bytes = 0
+        self.pending_s = 0.0
+        self.slowdown = 1.0
+        self.last_fuse_key: Optional[tuple] = None
+        self.picked: List[Job] = []
+        self.ewma_launch_s = 0.0
+        self.ewma_bucket_s: Dict[tuple, float] = {}
+        self.jobs = 0
+        self.launches = 0
+        self.bytes = 0
+        self.restarts = 0
+
+    def load_score(self) -> float:
+        return self.pending_s * self.slowdown
+
+    def stats_row(self) -> Dict[str, Any]:
+        return {"jobs": self.jobs, "launches": self.launches,
+                "bytes": self.bytes,
+                "ewma_launch_s": self.ewma_launch_s,
+                "ewma_bucket_s": {f"{k}/{w}": v for (k, w), v
+                                  in self.ewma_bucket_s.items()},
+                "queue_depth": self.queue.depth(),
+                "queued_bytes": self.queued_bytes,
+                "pending_s": self.pending_s,
+                "slowdown": self.slowdown,
+                "manager_restarts": self.restarts}
+
+
 class CrystalTPU:
-    """Coalescing offload engine for hashing jobs.
+    """Coalescing offload engine mesh for hashing jobs.
 
     Parameters mirror the paper's ablation switches plus coalescing:
       buffer_reuse:      keep and reuse staging buffers (idle queue)
       overlap:           async dispatch (no per-stage synchronization)
-      devices:           accelerators to round-robin over (default: all)
+      devices:           accelerators forming the mesh (default: all);
+                         each gets its own manager thread + lane queue
+                         and jobs are placed by the load-aware dispatch
+                         score (see module docstring)
       coalesce:          fuse queued same-fuse-key jobs into one batch
                          launch — 'direct' with 'direct', 'sliding' with
                          identical window/stride, 'gear' with 'gear'
@@ -219,6 +475,17 @@ class CrystalTPU:
                          lone synchronous write never stalls waiting
                          for writers that don't exist; raise it for
                          bursty many-writer workloads.
+      adaptive_fusion:   let the measured cost model retune the fusion
+                         caps and octave span at runtime (FusionPolicy);
+                         off by default — static engines behave exactly
+                         as before
+      target_launch_s:   adaptive-fusion latency bound: stop growing the
+                         fused batch once its modeled launch time would
+                         exceed this
+      shard_min_bytes:   padded staging footprint above which a single
+                         job is sharded across the mesh (>= 2 devices);
+                         per-device sub-launches reassemble into the
+                         parent result in submission order
 
     Priority lanes (``LANES`` order): ``lane='batch'`` queues behind
     every interactive ``fg`` job (the gateway's throughput QoS class),
@@ -228,7 +495,8 @@ class CrystalTPU:
     traffic is tracked by the ``scrub_jobs`` / ``scrub_launches`` /
     ``scrub_coalesced`` counters; ``queue_depth(lane)`` exposes the
     per-lane backlog (the node runtime's load-aware scrub backoff and
-    the gateway's stats read it).
+    the gateway's stats read it), summed across the mesh unless a
+    ``device`` index is given.
     """
 
     def __init__(self, devices=None, buffer_reuse: bool = True,
@@ -236,7 +504,10 @@ class CrystalTPU:
                  interpret: bool = True, coalesce: bool = True,
                  max_batch: int = 64, coalesce_window_s: float = 0.0,
                  max_fused_rows: int = 4096,
-                 max_fused_bytes: int = 64 << 20):
+                 max_fused_bytes: int = 64 << 20,
+                 adaptive_fusion: bool = False,
+                 target_launch_s: float = 0.25,
+                 shard_min_bytes: int = 8 << 20):
         self.devices = list(devices if devices is not None
                             else jax.devices())
         self.buffer_reuse = buffer_reuse
@@ -244,27 +515,54 @@ class CrystalTPU:
         self.interpret = interpret
         self.coalesce = coalesce
         self.max_batch = max(1, int(max_batch))
-        self.max_fused_rows = max(1, int(max_fused_rows))
-        self.max_fused_bytes = max(1, int(max_fused_bytes))
         self.coalesce_window_s = coalesce_window_s
+        self.shard_min_bytes = max(1, int(shard_min_bytes))
+        self.policy = FusionPolicy(max_fused_rows, max_fused_bytes,
+                                   adaptive=adaptive_fusion,
+                                   target_launch_s=target_launch_s)
+        self.cost = KernelCostModel(_cost_seeds())
+        # jobs submitted while the mesh has no devices park here (their
+        # depth still shows in queue_depth); nothing drains them — same
+        # semantics as the former shared queue with zero managers
         self.outstanding: LaneQueue = LaneQueue()
         self.idle: "queue.Queue[dict]" = queue.Queue()
         for _ in range(n_slots):
             self.idle.put({})          # slot: staging-buffer cache by shape
         self.running: List[Job] = []
         self._lock = threading.Lock()
+        self._rr = 0
         self.stats = {"jobs": 0, "bytes": 0, "launches": 0,
                       "coalesced": 0, "max_fused": 0,
                       "scrub_jobs": 0, "scrub_launches": 0,
-                      "scrub_coalesced": 0}
+                      "scrub_coalesced": 0,
+                      "sharded_jobs": 0, "shards": 0,
+                      "manager_restarts": 0}
+        # test hooks: _fault_hook(dev_index, batch) runs after a batch is
+        # drained but OUTSIDE the launch try (an exception there kills
+        # the manager thread -> crash-recovery path); _launch_hook runs
+        # INSIDE it (injected latency counts as measured launch wall,
+        # an exception fails only that batch)
+        self._fault_hook: Optional[Callable] = None
+        self._launch_hook: Optional[Callable] = None
+        self._dev_states = [_DeviceState(i, d)
+                            for i, d in enumerate(self.devices)]
         self._managers = [
-            threading.Thread(target=self._manager_loop, args=(d,),
-                             daemon=True, name=f"crystal-mgr-{i}")
-            for i, d in enumerate(self.devices)]
+            threading.Thread(target=self._manager_main, args=(s,),
+                             daemon=True, name=f"crystal-mgr-{s.index}")
+            for s in self._dev_states]
         self._alive = True
         self._shutdown_started = False
         for t in self._managers:
             t.start()
+
+    # backward-compatible views of the (possibly adapted) fusion caps
+    @property
+    def max_fused_rows(self) -> int:
+        return self.policy.cur_rows
+
+    @property
+    def max_fused_bytes(self) -> int:
+        return self.policy.cur_bytes
 
     # ------------------------------------------------------------------
     # submission API
@@ -276,26 +574,46 @@ class CrystalTPU:
         ``lane='scrub'`` marks background node-runtime traffic that
         queues behind both and is tracked by the ``scrub_*`` stats
         counters.  Any lane's job fuses with any same-fuse-key job once
-        a manager picks it up."""
+        a manager picks it up.  Jobs whose padded staging footprint
+        reaches ``shard_min_bytes`` on a >= 2 device mesh are sharded
+        into per-device sub-launches (child jobs appear in the stats;
+        the returned parent resolves when all shards do)."""
         if not self._alive:
             raise RuntimeError("CrystalTPU engine is shut down")
         if lane not in LANES:
             raise ValueError(f"unknown lane {lane!r}")
-        job = Job(kind=kind, data=np.asarray(data), meta=meta or {},
-                  callback=callback, lane=lane)
+        job = self._make_job(kind, np.asarray(data), meta or {},
+                             callback, lane)
+        plan = self._shard_plan(job)
+        if plan is not None:
+            return self._submit_sharded(job, plan)
+        self._dispatch(job)
+        return job
+
+    def map_stream(self, kind: str, buffers, meta=None) -> List[Job]:
+        """Submit a stream of jobs back-to-back (the paper's batched
+        streaming workload) and return the job list."""
+        return [self.submit(kind, b, meta) for b in buffers]
+
+    def _make_job(self, kind: str, data: np.ndarray, meta: Dict[str, Any],
+                  callback, lane: str, rows: Optional[np.ndarray] = None,
+                  lens: Optional[np.ndarray] = None) -> Job:
+        job = Job(kind=kind, data=data, meta=meta, callback=callback,
+                  lane=lane)
         if kind == "direct":
-            job.rows, job.lens = _normalize_direct(job.data, job.meta)
+            if rows is None:
+                rows, lens = _normalize_direct(job.data, job.meta)
+            job.rows, job.lens = rows, lens
             job.fuse_key = ("direct",)
-            n, w = job.rows.shape
+            n, w = rows.shape
             job.n_rows = n
             job.staged_width = 1 << (max(w, 4) - 1).bit_length()
         elif kind in ("sliding", "gear"):
-            # stream jobs fuse only within a buffer-size octave class
-            # (~8x width span): rows are padded to the batch max, so
-            # fusing a 4 KB CDC job with a 64 MB one would hash ~16000x
-            # padding for the small job — the class bound keeps fusion
-            # for genuinely similar bursts
-            octave = (max(job.data.size, 1) + 3).bit_length() // 3
+            # stream jobs fuse only within a buffer-size octave class:
+            # rows pad to the batch max, so fusing a 4 KB CDC job with a
+            # 64 MB one would hash ~16000x padding for the small job —
+            # the class bound keeps fusion for genuinely similar bursts
+            octave = self.policy.octave_class(job.data.size)
             if kind == "sliding":
                 job.fuse_key = ("sliding",
                                 int(job.meta.get("window", 48)),
@@ -307,25 +625,168 @@ class CrystalTPU:
             job.staged_width = 4 << (max(n_words, 4) - 1).bit_length()
         else:
             job.fuse_key = (kind, id(job))      # never fuses; error later
-        self.outstanding.put(job, lane=job.lane)
         return job
 
-    def map_stream(self, kind: str, buffers, meta=None) -> List[Job]:
-        """Submit a stream of jobs back-to-back (the paper's batched
-        streaming workload) and return the job list."""
-        return [self.submit(kind, b, meta) for b in buffers]
-
-    def snapshot_stats(self) -> Dict[str, int]:
+    # ------------------------------------------------------------------
+    # load-aware dispatch
+    # ------------------------------------------------------------------
+    def _dispatch(self, job: Job, exclude: Optional[int] = None,
+                  spread: bool = False) -> Job:
+        """Place one job on the mesh: cheapest device by
+        ``pending_s * slowdown``, with fuse-key affinity (a coalescable
+        job follows its burst while the affine device's backlog stays
+        within one job-cost of the best) and round-robin tie-breaking.
+        ``exclude`` skips a device being crash-recovered; ``spread``
+        disables the affinity pull (shard children were split to run on
+        *different* devices — affinity would fuse them right back)."""
         with self._lock:
-            return dict(self.stats)
+            job.cost_est = self.cost.estimate(job.kind, job.padded_bytes)
+            states = self._dev_states
+            cands = [s for s in states if s.index != exclude] or states
+            if not cands:
+                self.outstanding.put(job, lane=job.lane)
+                return job
+            self._rr = (self._rr + 1) % len(cands)
+            rr = self._rr
+            best = min(cands, key=lambda s: (s.load_score(),
+                                             (s.index - rr) % len(cands)))
+            tgt = best
+            if self.coalesce and job.fuse_key and not spread:
+                for s in cands:
+                    if (s.last_fuse_key == job.fuse_key
+                            and s.load_score() <= best.load_score()
+                            + job.cost_est * max(s.slowdown, 1.0)):
+                        tgt = s
+                        break
+            tgt.pending_s += job.cost_est
+            tgt.queued_bytes += job.padded_bytes
+            tgt.last_fuse_key = job.fuse_key
+            job.device_index = tgt.index
+            q = tgt.queue
+        q.put(job, lane=job.lane)
+        return job
 
-    def queue_depth(self, lane: Optional[str] = None) -> int:
-        """Jobs queued (not yet picked up by a manager) in ``lane``, or
-        in every lane when ``lane`` is None."""
-        return self.outstanding.depth(lane)
+    # ------------------------------------------------------------------
+    # whale-job sharding
+    # ------------------------------------------------------------------
+    def _shard_plan(self, job: Job):
+        """Per-device sub-launch plan for a whale job, or None."""
+        if len(self._dev_states) < 2:
+            return None
+        padded = job.padded_bytes
+        if padded < self.shard_min_bytes:
+            return None
+        n_dev = len(self._dev_states)
+        k = min(n_dev, max(2, padded // max(self.shard_min_bytes // 2, 1)))
+        if job.kind == "direct":
+            if job.n_rows < 2:
+                return None
+            k = min(k, job.n_rows)
+            return [("rows", a, b, 0)
+                    for a, b in ops.shard_row_ranges(job.n_rows, k)]
+        if job.kind in ("sliding", "gear"):
+            plan = ops.stream_shard_plan(
+                int(job.data.size), job.kind, k,
+                window=int(job.meta.get("window", 48)),
+                stride=int(job.meta.get("stride", 4)))
+            if plan is None:
+                return None
+            return [("span", a, b, drop) for a, b, drop in plan]
+        return None
+
+    def _submit_sharded(self, parent: Job, plan) -> Job:
+        """Split ``parent`` into child sub-launches, one per plan entry;
+        the last-finishing child's callback assembles the digests back
+        into the parent's result in submission order."""
+        k = len(plan)
+        results: List[Optional[Job]] = [None] * k
+        drops = [spec[3] for spec in plan]
+        state_lock = threading.Lock()
+        remaining = [k]
+
+        def child_cb(i):
+            def cb(child):
+                with state_lock:
+                    results[i] = child
+                    remaining[0] -= 1
+                    last = remaining[0] == 0
+                if last:
+                    self._assemble_shards(parent, results, drops)
+            return cb
+
+        flat = None if parent.kind == "direct" \
+            else parent.data.reshape(-1)
+        children = []
+        for i, spec in enumerate(plan):
+            _, a, b, _ = spec
+            if parent.kind == "direct":
+                child = self._make_job(
+                    "direct", parent.rows[a:b], dict(parent.meta),
+                    child_cb(i), parent.lane,
+                    rows=parent.rows[a:b], lens=parent.lens[a:b])
+            else:
+                child = self._make_job(parent.kind, flat[a:b],
+                                       dict(parent.meta), child_cb(i),
+                                       parent.lane)
+            children.append(child)
+        with self._lock:
+            self.stats["sharded_jobs"] += 1
+            self.stats["shards"] += k
+        for child in children:
+            self._dispatch(child, spread=True)
+        return parent
+
+    def _assemble_shards(self, parent: Job, results: List[Job], drops):
+        err = next((c.error for c in results if c.error is not None),
+                   None)
+        if err is not None:
+            parent.error = err
+        else:
+            try:
+                if parent.kind == "direct":
+                    parent.result = np.concatenate(
+                        [c.result for c in results], axis=0)
+                else:
+                    parent.result = np.concatenate(
+                        [c.result[d:] for c, d in zip(results, drops)])
+            except BaseException as e:
+                parent.error = e
+        merged: Dict[str, float] = {}
+        for c in results:                 # shards overlap: max per stage
+            for kk, v in (c.timings or {}).items():
+                merged[kk] = max(merged.get(kk, 0.0), v)
+        parent.timings = merged
+        parent.done.set()
+        if parent.callback is not None:
+            try:
+                parent.callback(parent)
+            except Exception:
+                pass
+
+    # ------------------------------------------------------------------
+    # stats / introspection
+    # ------------------------------------------------------------------
+    def snapshot_stats(self) -> Dict[str, Any]:
+        with self._lock:
+            out: Dict[str, Any] = dict(self.stats)
+            out["per_device"] = {s.index: s.stats_row()
+                                 for s in self._dev_states}
+            out["policy"] = self.policy.snapshot()
+            out["cost_model"] = self.cost.snapshot()
+        return out
+
+    def queue_depth(self, lane: Optional[str] = None,
+                    device: Optional[int] = None) -> int:
+        """Jobs queued (not yet picked up by a manager) in ``lane`` (or
+        every lane when None) — on one device's queue when ``device``
+        is an index, else summed across the mesh."""
+        if device is not None:
+            return self._dev_states[device].queue.depth(lane)
+        return (sum(s.queue.depth(lane) for s in self._dev_states)
+                + self.outstanding.depth(lane))
 
     def shutdown(self):
-        """Stop the managers after the queue drains.  Idempotent: only
+        """Stop the managers after every queue drains.  Idempotent: only
         the first call posts shutdown sentinels and joins — repeat calls
         (interpreter-exit atexit hook racing an explicit shutdown, a
         gateway closing over an already-stopped engine) return at once
@@ -336,10 +797,10 @@ class CrystalTPU:
             self._alive = False
         if not first:
             return
-        for _ in self._managers:
-            self.outstanding.put(None)
+        for s in self._dev_states:
+            s.queue.put(None)
         for t in self._managers:
-            t.join(timeout=5)
+            t.join(timeout=10)
 
     # ------------------------------------------------------------------
     # manager internals
@@ -373,32 +834,40 @@ class CrystalTPU:
             buf.fill(0)
         return buf
 
-    def _drain_batch(self, first: Job):
-        """Greedy coalescing: pull queued jobs with ``first``'s fuse key
-        behind it (direct with direct, sliding with identical
-        window/stride, gear with gear).  Returns (batch, carry) where
-        carry is a non-fusable job that was popped and must be executed
-        next."""
+    def _note_picked(self, dev: _DeviceState, job: Job):
+        with self._lock:
+            dev.picked.append(job)
+            dev.queued_bytes = max(dev.queued_bytes - job.padded_bytes, 0)
+
+    def _drain_batch(self, dev: _DeviceState, first: Job):
+        """Greedy coalescing on one device's queue: pull queued jobs
+        with ``first``'s fuse key behind it (direct with direct, sliding
+        with identical window/stride, gear with gear).  Returns (batch,
+        carry) where carry is a non-fusable job that was popped and must
+        be executed next."""
         batch = [first]
         if not (self.coalesce and first.kind in ("direct", "sliding",
                                                  "gear")):
             return batch, None
         rows, width = first.n_rows, first.staged_width
+        max_rows = self.policy.cur_rows
+        max_bytes = self.policy.cur_bytes
         deadline = time.perf_counter() + self.coalesce_window_s
         while len(batch) < self.max_batch:
             try:
-                nxt = self.outstanding.get_nowait()
+                nxt = dev.queue.get_nowait()
             except queue.Empty:
                 wait = deadline - time.perf_counter()
                 if wait <= 0:
                     break
                 try:
-                    nxt = self.outstanding.get(timeout=wait)
+                    nxt = dev.queue.get(timeout=wait)
                 except queue.Empty:
                     break
             if nxt is None:               # shutdown token: repost + stop
-                self.outstanding.put(None)
+                dev.queue.put(None)
                 break
+            self._note_picked(dev, nxt)
             if nxt.fuse_key != first.fuse_key:
                 return batch, nxt
             # cap the fused launch by its actual padded staging matrix
@@ -406,17 +875,28 @@ class CrystalTPU:
             # by total rows — not just by job count: many multi-row or
             # wide jobs must not stack into an unbounded batch
             new_width = max(width, nxt.staged_width)
-            if (rows + nxt.n_rows) * new_width > self.max_fused_bytes:
+            if (rows + nxt.n_rows) * new_width > max_bytes:
                 return batch, nxt
-            if nxt.kind == "direct" and \
-                    rows + nxt.n_rows > self.max_fused_rows:
+            if nxt.kind == "direct" and rows + nxt.n_rows > max_rows:
                 return batch, nxt
             rows += nxt.n_rows
             width = new_width
             batch.append(nxt)
         return batch, None
 
-    def _manager_loop(self, device):
+    def _manager_main(self, dev: _DeviceState):
+        """Crash-resilient wrapper: an exception escaping the manager
+        loop fails the picked in-flight jobs, re-dispatches the queued
+        remainder to surviving devices, counts ``manager_restarts``,
+        and restarts the loop — the queue is never stranded."""
+        while True:
+            try:
+                self._manager_loop(dev)
+                return                    # clean sentinel exit
+            except BaseException as e:
+                self._recover_manager(dev, e)
+
+    def _manager_loop(self, dev: _DeviceState):
         # terminates only on its shutdown token, never on the _alive
         # flag: a carried (popped-but-unfused) job must still execute
         # even if shutdown() lands while the previous batch runs
@@ -425,26 +905,32 @@ class CrystalTPU:
             if carry is not None:
                 job, carry = carry, None
             else:
-                job = self.outstanding.get()
+                job = dev.queue.get()
                 if job is None:
                     return
-            batch, carry = self._drain_batch(job)
+                self._note_picked(dev, job)
+            batch, carry = self._drain_batch(dev, job)
+            if self._fault_hook is not None:
+                self._fault_hook(dev.index, batch)
             slot = self._get_slot()
+            wall0 = time.perf_counter()
+            failed = False
             try:
                 with self._lock:
                     self.running.extend(batch)
+                if self._launch_hook is not None:
+                    self._launch_hook(dev.index, batch)
                 if job.kind == "direct":
-                    self._execute_direct(device, slot, batch)
+                    self._execute_direct(dev, slot, batch)
                 else:
-                    self._execute_stream_batch(device, slot, batch)
+                    self._execute_stream_batch(dev, slot, batch)
             except BaseException as e:          # surfaced via wait()
+                failed = True
                 for j in batch:
                     j.error = e
             finally:
-                with self._lock:
-                    for j in batch:
-                        if j in self.running:
-                            self.running.remove(j)
+                self._retire(dev, batch, time.perf_counter() - wall0,
+                             failed)
                 self._put_slot(slot)
                 for j in batch:
                     j.done.set()
@@ -454,13 +940,94 @@ class CrystalTPU:
                         except Exception:
                             pass
 
-    def _account(self, n_jobs: int, nbytes: int, n_scrub: int = 0):
+    def _retire(self, dev: _DeviceState, batch: List[Job], wall_s: float,
+                failed: bool):
+        """Credit the backlog clock, feed the cost model + fusion policy
+        with the measured launch wall time, and update the per-device
+        latency EWMAs (successful launches only)."""
+        kind = batch[0].kind
+        padded = sum(j.padded_bytes for j in batch)
+        if kind == "direct":
+            actual = sum(int(j.lens.sum()) for j in batch
+                         if j.lens is not None)
+            n_rows = sum(j.n_rows for j in batch)
+        else:
+            actual = sum(int(j.data.size) for j in batch)
+            n_rows = len(batch)
+        wbucket = max(j.staged_width for j in batch)
+        with self._lock:
+            for j in batch:
+                if j in self.running:
+                    self.running.remove(j)
+                if j in dev.picked:
+                    dev.picked.remove(j)
+                dev.pending_s = max(dev.pending_s - j.cost_est, 0.0)
+            if failed or kind not in ("direct", "sliding", "gear"):
+                return
+            est = max(self.cost.estimate(kind, padded), 1e-9)
+            self.cost.observe(kind, padded, wall_s)
+            oh, spb = self.cost.params(kind)
+            self.policy.observe(padded, actual, n_rows, wall_s, oh, spb)
+            key = (kind, wbucket)
+            prev = dev.ewma_bucket_s.get(key)
+            dev.ewma_bucket_s[key] = wall_s if prev is None \
+                else 0.75 * prev + 0.25 * wall_s
+            dev.ewma_launch_s = wall_s if not dev.ewma_launch_s \
+                else 0.75 * dev.ewma_launch_s + 0.25 * wall_s
+            ratio = min(max(wall_s / est, 0.05), 50.0)
+            dev.slowdown = min(max(0.7 * dev.slowdown + 0.3 * ratio,
+                                   0.05), 50.0)
+
+    def _recover_manager(self, dev: _DeviceState, err: BaseException):
+        """Fail the picked in-flight jobs with ``err``, move the queued
+        remainder to surviving devices (back onto our own queue when the
+        mesh has no other device), and count the restart."""
+        with self._lock:
+            picked, dev.picked = dev.picked, []
+            self.stats["manager_restarts"] += 1
+            dev.restarts += 1
+            for j in picked:
+                dev.pending_s = max(dev.pending_s - j.cost_est, 0.0)
+                if j in self.running:
+                    self.running.remove(j)
+        for j in picked:
+            if not j.done.is_set():
+                j.error = err
+                j.done.set()
+                if j.callback is not None:
+                    try:
+                        j.callback(j)
+                    except Exception:
+                        pass
+        moved: List[Job] = []
+        while True:                       # sentinel dequeues only once
+            try:                          # the lanes are empty, so this
+                item = dev.queue.get_nowait()   # drains every queued job
+            except queue.Empty:
+                break
+            if item is None:
+                dev.queue.put(None)       # keep our shutdown token
+                break
+            moved.append(item)
+        exclude = dev.index if len(self._dev_states) > 1 else None
+        for j in moved:
+            with self._lock:
+                dev.pending_s = max(dev.pending_s - j.cost_est, 0.0)
+                dev.queued_bytes = max(dev.queued_bytes - j.padded_bytes,
+                                       0)
+            self._dispatch(j, exclude=exclude)
+
+    def _account(self, dev: _DeviceState, n_jobs: int, nbytes: int,
+                 n_scrub: int = 0):
         with self._lock:
             self.stats["jobs"] += n_jobs
             self.stats["bytes"] += nbytes
             self.stats["launches"] += 1
             self.stats["coalesced"] += n_jobs - 1
             self.stats["max_fused"] = max(self.stats["max_fused"], n_jobs)
+            dev.jobs += n_jobs
+            dev.launches += 1
+            dev.bytes += nbytes
             if n_scrub:
                 # a launch containing any scrub job counts once, so
                 # scrub_launches < scrub_jobs is the fused-scrub signature
@@ -469,7 +1036,8 @@ class CrystalTPU:
                 self.stats["scrub_coalesced"] += n_scrub - 1
 
     # -- fused direct batch --------------------------------------------
-    def _execute_direct(self, device, slot: dict, batch: List[Job]):
+    def _execute_direct(self, dev: _DeviceState, slot: dict,
+                        batch: List[Job]):
         t0 = time.perf_counter()
         # stage 1-2: staging + transfer in.  One padded [B, W] batch for
         # the whole burst; rows are length-bound so zero padding to the
@@ -489,8 +1057,9 @@ class CrystalTPU:
             r += n
         words = staging.view("<u4") if staging.flags.c_contiguous \
             else np.ascontiguousarray(staging).view("<u4")
-        dev_words = jax.device_put(words, device)
-        dev_lens = jax.device_put((lens // 4).astype(np.int32), device)
+        dev_words = jax.device_put(words, dev.device)
+        dev_lens = jax.device_put((lens // 4).astype(np.int32),
+                                  dev.device)
         self._stage_sync(dev_words)
         t1 = time.perf_counter()
         # stage 3: ONE kernel launch for the fused batch, device-resident
@@ -508,11 +1077,12 @@ class CrystalTPU:
             j.result = host[r:r + n].copy()
             j.timings = dict(timings)       # batch-wide stage times
             r += n
-        self._account(len(batch), int(np.sum(lens)),
+        self._account(dev, len(batch), int(np.sum(lens)),
                       sum(j.lane == "scrub" for j in batch))
 
     # -- fused streaming batch (sliding / gear) ------------------------
-    def _execute_stream_batch(self, device, slot: dict, batch: List[Job]):
+    def _execute_stream_batch(self, dev: _DeviceState, slot: dict,
+                              batch: List[Job]):
         """Execute a burst of same-config stream jobs as ONE padded
         [B, L] multi-row kernel launch.  Rows are zero-padded to the
         widest buffer; B and the word width are bucketed to powers of
@@ -532,7 +1102,7 @@ class CrystalTPU:
         rows_u8 = staging.view(np.uint8).reshape(B, Wb * 4)
         for i, f in enumerate(flats):
             rows_u8[i, :f.size] = f
-        dev_words = jax.device_put(staging, device)
+        dev_words = jax.device_put(staging, dev.device)
         self._stage_sync(dev_words)
         t1 = time.perf_counter()
         if kind == "sliding":
@@ -561,7 +1131,7 @@ class CrystalTPU:
         timings = {"in": t1 - t0, "kernel": t2 - t1, "out": t3 - t2}
         for j in batch:
             j.timings = dict(timings)       # batch-wide stage times
-        self._account(len(batch), int(sum(lens)),
+        self._account(dev, len(batch), int(sum(lens)),
                       sum(j.lane == "scrub" for j in batch))
 
 

@@ -169,18 +169,24 @@ class ReadFuture:
 
 class _HashHandle:
     """Uniform handle over an in-flight chunk-digest computation: either
-    host digests computed eagerly (cpu / infinite / empty input) or an
-    offload-engine job whose result is materialized on wait()."""
+    host digests computed eagerly (cpu / infinite / empty input) or one
+    or more offload-engine jobs — a whale submission splits into
+    independently packed chunk groups (see ``SAI._submit_hash``) —
+    whose digests are materialized in submission order on wait()."""
 
-    def __init__(self, job: Optional[crystal_mod.Job] = None,
+    def __init__(self, jobs: Optional[List[crystal_mod.Job]] = None,
                  digests: Optional[List[bytes]] = None):
-        self._job = job
+        self._jobs = jobs or []
         self._digests = digests
 
     def wait(self) -> List[bytes]:
         if self._digests is None:
-            rows = self._job.wait()                 # [n, 16] uint8
-            self._digests = [rows[i].tobytes() for i in range(rows.shape[0])]
+            out: List[bytes] = []
+            for job in self._jobs:
+                rows = job.wait()                   # [n, 16] uint8
+                out.extend(rows[i].tobytes()
+                           for i in range(rows.shape[0]))
+            self._digests = out
         return self._digests
 
 
@@ -234,7 +240,16 @@ class SAI:
         return pack_blocks(chunks)
 
     def _submit_hash(self, chunks: List[bytes]) -> _HashHandle:
-        """Start hashing ``chunks``; non-blocking on the tpu path."""
+        """Start hashing ``chunks``; non-blocking on the tpu path.
+
+        A whale submission (total bytes past twice the engine's shard
+        threshold) splits into contiguous chunk groups packed and
+        submitted independently: each group pads only to its own widest
+        chunk (less padding than one global-width pack), hashing of
+        group i overlaps the packing of group i+1, and the engine's
+        load-aware dispatch spreads the groups across the device mesh.
+        Digest order is preserved — groups are contiguous and the
+        handle concatenates them in submission order."""
         if not chunks:
             return _HashHandle(digests=[])
         if self.cfg.hasher in ("infinite", "cpu"):
@@ -242,9 +257,37 @@ class SAI:
             # time is excluded from the timed stages by the caller.
             return _HashHandle(digests=[block_digest_cpu(c)
                                         for c in chunks])
-        rows, lens = self._pack_chunks(chunks)
-        return _HashHandle(job=self.engine.submit(
-            "direct", rows, {"lens": lens}, lane=self.cfg.lane))
+        eng = self.engine
+        jobs = []
+        for lo, hi in self._shard_groups(chunks, eng):
+            rows, lens = self._pack_chunks(chunks[lo:hi])
+            jobs.append(eng.submit("direct", rows, {"lens": lens},
+                                   lane=self.cfg.lane))
+        return _HashHandle(jobs=jobs)
+
+    @staticmethod
+    def _shard_groups(chunks: List[bytes], eng) -> List[tuple]:
+        """Contiguous ``(lo, hi)`` chunk-index groups for one hash
+        submission: a single group normally, several balanced-byte
+        groups for whale leaves (big checkpoint tensors) so the engine
+        mesh can hash them in parallel."""
+        total = sum(len(c) for c in chunks)
+        shard = int(getattr(eng, "shard_min_bytes", 0) or 0)
+        n_dev = max(len(getattr(eng, "devices", ())), 1)
+        if len(chunks) < 2 or shard <= 0 or total < 2 * shard:
+            return [(0, len(chunks))]
+        n_groups = min(len(chunks), max(2, total // shard), 4 * n_dev)
+        target = total / n_groups
+        groups = []
+        lo = acc = 0
+        for i, c in enumerate(chunks):
+            acc += len(c)
+            if acc >= target and len(groups) < n_groups - 1:
+                groups.append((lo, i + 1))
+                lo, acc = i + 1, 0
+        if lo < len(chunks):
+            groups.append((lo, len(chunks)))
+        return groups
 
     def _hash_chunks(self, chunks: List[bytes]) -> List[bytes]:
         return self._submit_hash(chunks).wait()

@@ -281,3 +281,78 @@ def gear_hash(data: bytes | np.ndarray, interpret: bool = True,
     out = np.asarray(gear_hash_device(words, interpret=interpret,
                                       version=version))
     return gear_finish(out, L)
+
+
+# ----------------------------------------------------------------------
+# whale-job shard planning (host-side helpers for the engine mesh)
+# ----------------------------------------------------------------------
+# the gear hash at byte p is a 32-tap window over x[p-31..p] (each tap
+# shifts out of the 32-bit accumulator after 32 doublings), so a shard
+# that carries 32 bytes of left context reproduces the full-buffer
+# output from its first owned byte onward
+GEAR_HISTORY_BYTES = 32
+
+
+def shard_row_ranges(n_rows: int, n_shards: int):
+    """Balanced contiguous ``[start, stop)`` row ranges covering
+    ``n_rows`` — the per-device sub-launch split of a whale direct-hash
+    job (row digests are independent, so any row partition reassembles
+    by concatenation in range order)."""
+    k = max(1, min(int(n_shards), int(n_rows)))
+    base, rem = divmod(int(n_rows), k)
+    ranges = []
+    start = 0
+    for i in range(k):
+        stop = start + base + (1 if i < rem else 0)
+        ranges.append((start, stop))
+        start = stop
+    return ranges
+
+
+def stream_shard_plan(n_bytes: int, kind: str, n_shards: int,
+                      window: int = 48, stride: int = 4):
+    """Byte-slice plan ``[(start, stop, n_drop), ...]`` splitting one
+    stream buffer into sub-launches whose outputs — after dropping the
+    first ``n_drop`` values of each shard — concatenate to exactly the
+    unsharded kernel output.
+
+    sliding: the offset grid ``o = f * stride`` partitions across
+    shards; each shard's slice starts at its first owned offset (start
+    is stride-aligned) and extends through the last owned window, so
+    every window a shard owns lies fully inside its slice and nothing
+    is dropped.
+
+    gear: each shard k > 0 takes ``GEAR_HISTORY_BYTES`` of left
+    context and drops that many leading outputs (they belong to the
+    previous shard); the kernel's zero-history warm-up therefore only
+    ever affects positions the previous shard already produced.
+
+    Returns None when the buffer is too small to shard meaningfully.
+    """
+    n_bytes, k = int(n_bytes), int(n_shards)
+    if kind == "sliding":
+        n_off = (n_bytes - window) // stride + 1
+        k = min(k, max(n_off // 2, 0))
+        if k < 2:
+            return None
+        base, rem = divmod(n_off, k)
+        plan = []
+        f = 0
+        for i in range(k):
+            c = base + (1 if i < rem else 0)
+            start = f * stride
+            stop = min((f + c - 1) * stride + window, n_bytes)
+            plan.append((start, stop, 0))
+            f += c
+        return plan
+    if kind == "gear":
+        h = GEAR_HISTORY_BYTES
+        k = min(k, n_bytes // (4 * h))
+        if k < 2:
+            return None
+        bounds = [n_bytes * i // k for i in range(k + 1)]
+        plan = [(0, bounds[1], 0)]
+        for i in range(1, k):
+            plan.append((bounds[i] - h, bounds[i + 1], h))
+        return plan
+    return None

@@ -34,6 +34,35 @@ class HW:
     link_bw: float = 50e9               # bytes/s per link
 
 
+# uint32 ALU ops per byte of hashed input, measured from compiled kernel
+# HLO by benchmarks/kernel_roofline.py (same values as
+# benchmarks.common.OPS_PER_BYTE, keyed by engine job kind)
+HASH_OPS_PER_BYTE = {"direct": 60.9, "sliding": 635.3, "gear": 85.0}
+
+# effective integer-op rate of the interpret-mode (XLA:CPU) host this
+# repo measures on — the seed only has to be order-of-magnitude right,
+# the engine's KernelCostModel regresses the true rate online
+HOST_INT_OPS = 2e9
+
+# per-launch fixed cost seed (dispatch + staging + jit cache hit) on the
+# interpret-mode host; also refined online
+HOST_LAUNCH_OVERHEAD_S = 2e-3
+
+
+def hash_cost_seed(kind: str, int_ops_per_s: float = HOST_INT_OPS,
+                   launch_overhead_s: float = HOST_LAUNCH_OVERHEAD_S
+                   ) -> Dict[str, float]:
+    """Seed parameters for the offload engine's launch-cost model:
+    ``sec_per_byte`` from the kernel's measured op count over the host
+    int-op rate, plus a fixed ``launch_overhead_s``.  The engine
+    (repro.core.crystal.KernelCostModel) starts every dispatch decision
+    from these and replaces them with EWMA-regressed measured values as
+    launches retire."""
+    ops_per_byte = HASH_OPS_PER_BYTE.get(kind, 100.0)
+    return {"sec_per_byte": ops_per_byte / float(int_ops_per_s),
+            "launch_overhead_s": float(launch_overhead_s)}
+
+
 def model_flops(arch: str, shape_name: str) -> float:
     """6*N*D convention (N = active params, D = tokens processed)."""
     cfg = get_config(arch)

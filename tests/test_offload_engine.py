@@ -365,6 +365,7 @@ def test_shutdown_idempotent(rng):
     # managers joined exactly once; queue holds no stray sentinels
     assert all(not t.is_alive() for t in eng._managers)
     assert eng.outstanding._sentinels == 0
+    assert all(d.queue._sentinels == 0 for d in eng._dev_states)
 
 
 def test_default_engine_registers_atexit_shutdown():
