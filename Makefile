@@ -1,6 +1,6 @@
 PYTHON ?= python
 
-.PHONY: test test-fast dev-deps bench bench-smoke bench-mesh-smoke
+.PHONY: test test-fast test-crash dev-deps bench bench-smoke bench-mesh-smoke
 
 dev-deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -14,6 +14,11 @@ test-fast:
 		tests/test_offload_engine.py tests/test_castore.py \
 		tests/test_checkpoint.py tests/test_chunking.py
 
+# durability: WAL framing fuzz + crash/restart fault-injection matrix
+test-crash:
+	PYTHONPATH=src $(PYTHON) -m pytest -x -q tests/test_wal.py \
+		tests/test_crash_recovery.py
+
 bench:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/run.py
 
@@ -25,7 +30,7 @@ bench:
 bench-smoke:
 	BENCH_SMOKE=1 BENCH_JSON=BENCH_smoke.json PYTHONPATH=src:. \
 		$(PYTHON) benchmarks/run.py \
-		fig4 fig11 read scrub gateway mesh > bench-smoke.csv
+		fig4 fig11 read scrub recovery gateway mesh > bench-smoke.csv
 	@cat bench-smoke.csv
 
 # engine-mesh ablation alone (1 vs 4 forced host devices, static vs

@@ -1,0 +1,121 @@
+"""Durability tax + cold-recovery speed (ISSUE 7 acceptance rows).
+
+Two questions the WAL + persistent block store must answer with
+numbers:
+
+1. What does durability cost the write path?  The same pipelined
+   ``write_async`` burst runs against an in-memory store
+   (``durable=0``) and a WAL-backed persistent one (``durable=1``,
+   every write blocking on its group-committed fsync).  The acceptance
+   bar is ``ratio <= 2`` at bench-smoke sizes — group commit amortizing
+   many writers' records into few fsyncs is what keeps it there.
+
+2. How fast is cold recovery?  A store is built with snapshotting
+   disabled so a >=1k-record tail accumulates, "killed" (WAL crashed so
+   close-time compaction can't shrink the tail), and reopened cold —
+   segment scans, tail replay, claim/pin reconciliation, refcount
+   verification.  The bar is < 1 second for the 1k-record tail.
+
+Both bars are asserted here (``ok=1`` in the derived column) so CI's
+bench-smoke step fails loudly on regression.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import mbps, scaled
+from repro.core import SAI, SAIConfig, make_store
+from repro.core.castore import open_durable_store
+
+N_FILES = scaled(32, 16)
+FILE_KB = scaled(256, 128)
+BLOCK_KB = scaled(64, 32)
+REPEATS = 5                       # best-of: container noise rejection
+
+REPLAY_WRITES = 180               # 6 WAL records each -> >=1k-record tail
+REPLAY_FILE_B = 1100
+
+
+def _cfg(**kw):
+    kw.setdefault("block_size", BLOCK_KB << 10)
+    return SAIConfig(ca="fixed", hasher="cpu", **kw)
+
+
+def _burst(sai: SAI, datas, tag: str) -> float:
+    t0 = time.perf_counter()
+    futs = [sai.write_async(f"/{tag}/{i}", d) for i, d in enumerate(datas)]
+    for f in futs:
+        f.result()
+    return time.perf_counter() - t0
+
+
+def run() -> list:
+    rows: list = []
+    rng = np.random.default_rng(7)
+    burst = [rng.integers(0, 256, FILE_KB << 10, dtype=np.uint8).tobytes()
+             for _ in range(N_FILES)]
+    total = sum(len(d) for d in burst)
+
+    # -- durability tax on the write path --------------------------------
+    mgr0, _ = make_store(4, replication=2)
+    sai0 = SAI(mgr0, _cfg())
+    _burst(sai0, burst, tag="warm")
+    t_mem = min(_burst(sai0, burst, tag=f"burst{r}")
+                for r in range(REPEATS))
+    sai0.close()
+    rows.append((f"recovery/write_durable0/{N_FILES}x{FILE_KB}KB",
+                 t_mem / N_FILES * 1e6,
+                 f"{mbps(total, t_mem):.1f}MBps_durable=0"))
+
+    data_dir = tempfile.mkdtemp(prefix="bench-recovery-")
+    try:
+        mgr1, _ = make_store(4, replication=2, data_dir=data_dir)
+        sai1 = SAI(mgr1, _cfg())
+        _burst(sai1, burst, tag="warm")
+        t_dur = min(_burst(sai1, burst, tag=f"burst{r}")
+                    for r in range(REPEATS))
+        sai1.close()
+        mgr1.close()
+    finally:
+        shutil.rmtree(data_dir, ignore_errors=True)
+    ratio = t_dur / max(t_mem, 1e-9)
+    ok = int(ratio <= 2.0)
+    rows.append((f"recovery/write_durable1/{N_FILES}x{FILE_KB}KB",
+                 t_dur / N_FILES * 1e6,
+                 f"{mbps(total, t_dur):.1f}MBps_durable=1_"
+                 f"ratio={ratio:.2f}_ok={ok}"))
+    assert ok, f"durable write {ratio:.2f}x in-memory (bar: 2x)"
+
+    # -- cold recovery of a >=1k-record WAL tail -------------------------
+    data_dir = tempfile.mkdtemp(prefix="bench-recovery-cold-")
+    try:
+        mgr, _, _ = open_durable_store(data_dir, n_nodes=3, replication=2,
+                                       snapshot_every=10 ** 9)
+        sai = SAI(mgr, _cfg(durable_sync=False, block_size=1024))
+        for i in range(REPLAY_WRITES):
+            sai.write(f"/f{i}", rng.integers(
+                0, 256, REPLAY_FILE_B, dtype=np.uint8).tobytes())
+        mgr.wait_durable()
+        n_records = mgr.wal.last_seq
+        mgr.wal.crash()           # SIGKILL-style: no close-time snapshot
+        mgr.close()
+
+        t0 = time.perf_counter()
+        mgr2, _, rep = open_durable_store(data_dir, n_nodes=3,
+                                          replication=2)
+        wall = time.perf_counter() - t0
+        mgr2.close()
+    finally:
+        shutil.rmtree(data_dir, ignore_errors=True)
+    ok = int(wall < 1.0 and rep.refcount_drift == 0
+             and rep.replayed >= 1000)
+    rows.append((f"recovery/cold_replay/{n_records}rec", wall * 1e6,
+                 f"replayed={rep.replayed}_wall_ms={wall * 1e3:.1f}_"
+                 f"drift={rep.refcount_drift}_ok={ok}"))
+    assert ok, (f"cold recovery: {wall:.3f}s for {rep.replayed} records "
+                f"(bar: <1s for >=1k), drift={rep.refcount_drift}")
+    return rows

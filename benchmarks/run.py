@@ -30,6 +30,7 @@ MODULES = [
     "benchmarks.fig11_checkpoint",
     "benchmarks.read_path",
     "benchmarks.scrub_interference",
+    "benchmarks.recovery",
     "benchmarks.gateway_saturation",
     "benchmarks.engine_mesh",
     "benchmarks.fig12_17_competing",

@@ -14,6 +14,8 @@ fused-background-burst signature — and the runtime's sweep counters.
 """
 from __future__ import annotations
 
+import shutil
+import tempfile
 import time
 
 import numpy as np
@@ -51,8 +53,16 @@ def run() -> list:
     total = sum(len(d) for d in burst)
     times = {}
 
-    for mode in ("baseline", "with_scrub"):
-        mgr, _ = make_store(4, replication=2)
+    for mode in ("baseline", "with_scrub", "durable"):
+        # "durable" reruns the baseline burst against a WAL-backed
+        # persistent store (ISSUE 7): same engine/write path, plus
+        # group-committed metadata fsyncs and block-segment flushes
+        data_dir = tempfile.mkdtemp(prefix="bench-scrub-durable-") \
+            if mode == "durable" else None
+        if data_dir is not None:
+            mgr, _ = make_store(4, replication=2, data_dir=data_dir)
+        else:
+            mgr, _ = make_store(4, replication=2)
         engine = CrystalTPU(coalesce_window_s=0.02)
         sai = SAI(mgr, SAIConfig(ca="fixed", hasher="tpu",
                                  block_size=BLOCK_KB << 10),
@@ -79,12 +89,14 @@ def run() -> list:
         _timed_burst(sai, warmup, tag="warmup")
         t = _timed_burst(sai, burst, tag="burst")
         times[mode] = t
-        derived = f"{mbps(total, t):.1f}MBps"
+        durable = int(mode == "durable")
+        derived = f"{mbps(total, t):.1f}MBps_durable={durable}"
+        if mode != "baseline":
+            ratio = t / max(times["baseline"], 1e-9)
+            derived += f"_slowdown={ratio:.2f}x"
         if runtime is not None:
             runtime.stop()
             s = runtime.snapshot_stats()
-            ratio = t / max(times["baseline"], 1e-9)
-            derived += f"_slowdown={ratio:.2f}x"
             rows.append((f"scrub/engine/scrub_jobs/{RESIDENT_FILES}res",
                          float(s["scrub_jobs"]),
                          f"scrub_launches={s['scrub_launches']}_"
@@ -98,5 +110,8 @@ def run() -> list:
                      f"{N_FILES}x{FILE_KB}KB",
                      t / N_FILES * 1e6, derived))
         sai.close()
+        if data_dir is not None:
+            mgr.close()
+            shutil.rmtree(data_dir, ignore_errors=True)
         engine.shutdown()
     return rows

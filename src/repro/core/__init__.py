@@ -3,10 +3,14 @@ content-addressable storage system — HashTPU kernels (repro.kernels),
 the CrystalTPU task runtime, the MosaStore-analog CA store and client SAI,
 plus chunking / integrity substrates."""
 from repro.core.castore import (MetadataManager, StorageNode, BlockMeta,  # noqa: F401
-                                NodeFailure, make_store)
+                                NodeFailure, RecoveryReport, make_store,
+                                open_durable_store)
+from repro.core.blockstore import BlockStore  # noqa: F401
+from repro.core.wal import WALError, WriteAheadLog  # noqa: F401
+from repro.core.faultinject import CrashPoint, FaultInjector  # noqa: F401
 from repro.core.crystal import CrystalTPU, Job, default_engine  # noqa: F401
-from repro.core.sai import (SAI, SAIConfig, ReadFuture, WriteFuture,  # noqa: F401
-                            WriteStats, pack_blocks)
+from repro.core.sai import (SAI, SAIConfig, ReadFuture, StoreIOError,  # noqa: F401
+                            WriteFuture, WriteStats, pack_blocks)
 from repro.core.noderuntime import (ClusterRuntime, NodeRuntime,  # noqa: F401
                                     NodeRuntimeConfig)
 from repro.core import chunking, integrity  # noqa: F401

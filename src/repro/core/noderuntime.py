@@ -99,9 +99,17 @@ class NodeRuntime:
 
     def scrub_once(self, paced: bool = False) -> Dict[str, int]:
         """One full sweep of this node.  Returns {scanned, corrupt}."""
+        node = self.node
+        digests = [] if node.failed else node.healthy_digests()
+        return self.scrub_digests(digests, paced=paced)
+
+    def scrub_digests(self, digests: List[bytes],
+                      paced: bool = False) -> Dict[str, int]:
+        """Engine-verify a specific digest list on this node (the full
+        sweep and the recovery suspect-scrub share this path).  Returns
+        {scanned, corrupt}."""
         cl, node, cfg = self.cluster, self.node, self.cluster.cfg
         scanned = corrupt = 0
-        digests = [] if node.failed else node.healthy_digests()
         for k in range(0, len(digests), cfg.scrub_batch_blocks):
             if not cl._gate():
                 break
@@ -249,6 +257,30 @@ class ClusterRuntime:
         out = {"scanned": 0, "corrupt": 0}
         for nr in self.node_runtimes:
             res = nr.scrub_once()
+            out["scanned"] += res["scanned"]
+            out["corrupt"] += res["corrupt"]
+        return out
+
+    def scrub_suspects(self,
+                       suspects: Dict[int, List[bytes]]) -> Dict[str, int]:
+        """Engine-verify the blocks a crash recovery flagged as suspect
+        (the trailing, possibly-unsynced records of each node's final
+        block-store segment — ``RecoveryReport.suspects``).  Recovery is
+        a scrub workload: each suspect streams through the engine's
+        scrub lane exactly like a sweep burst; mismatches quarantine the
+        copy and enqueue repair.  Suspects no longer resident (already
+        reclaimed by recovery's unregistered-resident pass) are skipped.
+        Returns {scanned, corrupt, skipped}."""
+        out = {"scanned": 0, "corrupt": 0, "skipped": 0}
+        by_node = {nr.node.node_id: nr for nr in self.node_runtimes}
+        for nid, digests in suspects.items():
+            nr = by_node.get(nid)
+            if nr is None or nr.node.failed:
+                out["skipped"] += len(digests)
+                continue
+            live = [d for d in digests if nr.node.has(d)]
+            out["skipped"] += len(digests) - len(live)
+            res = nr.scrub_digests(live)
             out["scanned"] += res["scanned"]
             out["corrupt"] += res["corrupt"]
         return out

@@ -58,6 +58,7 @@ Configurations mirror the paper's evaluation matrix:
 from __future__ import annotations
 
 import hashlib
+import os
 import queue
 import threading
 import time
@@ -92,6 +93,15 @@ class SAIConfig:
     #                                   hash submission: 'fg' | 'batch' |
     #                                   'scrub' (gateway QoS classes map
     #                                   tenants onto these)
+    durable_sync: bool = True         # with a WAL-backed manager, block
+    #                                   each write until its commit
+    #                                   record (and the block bytes it
+    #                                   references) survive a crash —
+    #                                   one group-commit fsync wait, not
+    #                                   per-block fsyncs.  False =
+    #                                   eventual durability (the flush
+    #                                   interval).  No-op for in-memory
+    #                                   stores.
 
 
 @dataclass
@@ -106,6 +116,23 @@ class WriteStats:
     def similarity(self) -> float:
         total = self.new_blocks + self.dup_blocks
         return self.dup_blocks / total if total else 0.0
+
+
+class StoreIOError(IOError):
+    """A store-stage block write failed (disk full, permissions, torn
+    device).  Carries the failing path/digest/node so a
+    ``WriteFuture.result()`` raises actionable context instead of the
+    bare OSError the pipeline thread caught."""
+
+    def __init__(self, path: str, digest: bytes, node_id: int,
+                 cause: BaseException):
+        super().__init__(
+            f"store stage failed for {path!r} block {digest.hex()} "
+            f"on node {node_id}: {cause}")
+        self.path = path
+        self.digest = digest
+        self.node_id = node_id
+        self.cause = cause
 
 
 class WriteFuture:
@@ -192,6 +219,10 @@ class _HashHandle:
 
 _ORACLE_COUNTER = [0]
 _ORACLE_LOCK = threading.Lock()
+# ca='none' digests are synthetic, not content-derived: a per-process
+# nonce keeps a restarted process from colliding with raw digests a
+# durable store persisted under the previous process's counter values
+_ORACLE_NONCE = os.urandom(4)
 
 
 class SAI:
@@ -356,8 +387,7 @@ class SAI:
                 for i, (chunk, digest) in enumerate(zip(chunks, digests)):
                     if digest in claimed:
                         locs = mgr.place(digest)
-                        for nid in locs:
-                            mgr.nodes[nid].put(digest, chunk)
+                        self._put_block(path, digest, chunk, locs)
                         mgr.finish_claim(digest, locs)
                         claimed.remove(digest)
                         locmap[digest] = locs
@@ -370,7 +400,7 @@ class SAI:
                 locs = locmap.get(digest)
                 if locs is None:
                     waits[digest].wait()
-                    locs, is_new = self._resolve_block(digest, chunk)
+                    locs, is_new = self._resolve_block(path, digest, chunk)
                     if is_new:
                         new_idx.add(i)
                     locmap[digest] = locs
@@ -380,12 +410,24 @@ class SAI:
                 else:
                     stats.dup_blocks += 1
                 blocks.append(BlockMeta(digest, len(chunk), tuple(locs)))
-            mgr.commit_blockmap(path, blocks, total_len)
+            seq = mgr.commit_blockmap(path, blocks, total_len)
+            if self.cfg.durable_sync and seq is not None:
+                mgr.wait_durable(seq)
         finally:
             mgr.unpin_blocks(digests)
         return stats
 
-    def _resolve_block(self, digest: bytes, chunk: bytes):
+    def _put_block(self, path: str, digest: bytes, chunk: bytes, locs):
+        """Store one block on its replica nodes, wrapping I/O failures
+        with the failing path/digest (StoreIOError) so pipeline threads
+        surface actionable errors on the WriteFuture."""
+        for nid in locs:
+            try:
+                self.manager.nodes[nid].put(digest, chunk)
+            except OSError as e:
+                raise StoreIOError(path, digest, nid, e) from e
+
+    def _resolve_block(self, path: str, digest: bytes, chunk: bytes):
         """Dup-or-store one block through the claim protocol (used when
         a concurrent writer's claim we waited on aborted): loops until
         the digest is either registered by someone (dup) or claimed and
@@ -398,8 +440,7 @@ class SAI:
             if claimed:
                 try:
                     locs = mgr.place(digest)
-                    for nid in locs:
-                        mgr.nodes[nid].put(digest, chunk)
+                    self._put_block(path, digest, chunk, locs)
                 except BaseException:
                     mgr.finish_claim(digest, None)
                     raise
@@ -421,17 +462,18 @@ class SAI:
                 with _ORACLE_LOCK:
                     _ORACLE_COUNTER[0] += 1
                     n = _ORACLE_COUNTER[0]
-                digest = b"raw!" + n.to_bytes(12, "little")
+                digest = b"raw!" + _ORACLE_NONCE + n.to_bytes(8, "little")
                 mgr.pin_blocks([digest])     # GC guard until commit
                 pinned.append(digest)
                 locs = mgr.place(digest)
-                for nid in locs:
-                    mgr.nodes[nid].put(digest, chunk)
+                self._put_block(path, digest, chunk, locs)
                 mgr.register_block(digest, locs)
                 blocks.append(BlockMeta(digest, len(chunk), locs))
                 stats.new_blocks += 1
                 stats.new_bytes += len(chunk)
-            mgr.commit_blockmap(path, blocks, len(data))
+            seq = mgr.commit_blockmap(path, blocks, len(data))
+            if self.cfg.durable_sync and seq is not None:
+                mgr.wait_durable(seq)
         finally:
             mgr.unpin_blocks(pinned)
         stats.stage_s = {"store": time.perf_counter() - t0}

@@ -65,7 +65,7 @@ from collections import deque
 from typing import Any, Deque, Dict, List, Optional, Tuple
 
 from repro.core import crystal as crystal_mod
-from repro.core.castore import MetadataManager
+from repro.core.castore import MetadataManager, open_durable_store
 from repro.core.crystal import CrystalTPU
 from repro.core.noderuntime import ClusterRuntime, NodeRuntimeConfig
 from repro.core.sai import SAI, SAIConfig
@@ -333,6 +333,21 @@ class GatewayConfig:
     #                                   the session binds to the token's
     #                                   tenant, not the claimed name
     max_frame_bytes: int = MAX_FRAME_BYTES
+    adaptive_fusion: bool = True      # when the gateway resolves the
+    #                                   process-default engine itself,
+    #                                   turn measured fusion-cap tuning
+    #                                   on (an explicitly passed engine
+    #                                   is never touched — its owner
+    #                                   decides)
+    data_dir: Optional[str] = None    # durable mode: open a WAL-backed
+    #                                   store here instead of taking a
+    #                                   caller-owned manager; the
+    #                                   gateway owns its lifecycle
+    #                                   (recovery at start, close on
+    #                                   shutdown) and hands recovery
+    #                                   suspects to the scrub runtime
+    n_nodes: int = 4                  # durable-mode store shape
+    replication: int = 1
 
 
 @dataclasses.dataclass
@@ -374,12 +389,26 @@ class StorageGateway:
     is what fuses different clients' hash bursts into common launches.
     """
 
-    def __init__(self, manager: MetadataManager,
+    def __init__(self, manager: Optional[MetadataManager] = None,
                  engine: Optional[CrystalTPU] = None,
                  config: Optional[GatewayConfig] = None):
+        self.cfg = config or GatewayConfig()
+        self.recovery_report = None
+        self._owns_store = False
+        if manager is None:
+            if self.cfg.data_dir is None:
+                raise ValueError(
+                    "StorageGateway needs a manager or "
+                    "GatewayConfig(data_dir=...)")
+            manager, _, self.recovery_report = open_durable_store(
+                self.cfg.data_dir, n_nodes=self.cfg.n_nodes,
+                replication=self.cfg.replication)
+            self._owns_store = True
+        elif self.cfg.data_dir is not None:
+            raise ValueError("pass a manager OR data_dir, not both")
         self.manager = manager
         self._engine = engine
-        self.cfg = config or GatewayConfig()
+
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
         self._tenants: Dict[str, _Tenant] = {}
@@ -400,6 +429,12 @@ class StorageGateway:
         if self.cfg.scrub:
             self.runtime = ClusterRuntime(manager, engine=self.engine,
                                           config=self.cfg.runtime)
+            if self.recovery_report is not None \
+                    and self.recovery_report.suspects:
+                # recovery IS a scrub workload: engine-verify the
+                # trailing blocks the crash left unproven before
+                # background sweeps resume
+                self.runtime.scrub_suspects(self.recovery_report.suspects)
             self.runtime.start()
         self._scheduler = threading.Thread(target=self._scheduler_loop,
                                            daemon=True,
@@ -416,6 +451,10 @@ class StorageGateway:
         Submitting to a shut-down engine fails loudly instead."""
         if self._engine is None:
             self._engine = crystal_mod.default_engine()
+            if self.cfg.adaptive_fusion:
+                # gateway default (ROADMAP item 3 follow-on): measured
+                # fusion caps on for the shared engine we resolved
+                self._engine.policy.adaptive = True
         return self._engine
 
     def connect(self) -> GatewayChannel:
@@ -803,3 +842,5 @@ class StorageGateway:
             t.sai.close()
         if self.runtime is not None:
             self.runtime.stop()
+        if self._owns_store:
+            self.manager.close()

@@ -539,3 +539,87 @@ def test_gateway_close_idempotent(rng):
     with pytest.raises(RetryLater):
         client.write("/g", blob)                     # closed: backpressure
     eng.shutdown()
+
+
+# ----------------------------------------------------------------------
+# adaptive fusion default + durable mode (ISSUE 7 satellites)
+# ----------------------------------------------------------------------
+def test_gateway_default_engine_gets_adaptive_fusion(rng, monkeypatch):
+    """The gateway turns measured adaptive fusion ON when it resolves
+    the process-default engine (ROADMAP item 3 follow-on), and a soak
+    of client bursts keeps the retuned caps inside the policy bounds."""
+    eng = CrystalTPU()
+    assert not eng.policy.adaptive                  # engine default: off
+    monkeypatch.setattr(svc.crystal_mod, "default_engine", lambda: eng)
+    gw = StorageGateway(make_store(4)[0], engine=None,
+                        config=GatewayConfig(sai=_sai_cfg()))
+    try:
+        assert gw.engine is eng and eng.policy.adaptive
+        client = GatewayClient(gw, "soak")
+        for i in range(30):                         # soak: retune cycles
+            blob = rng.integers(0, 256, 4096 * (1 + i % 4),
+                                dtype=np.uint8).tobytes()
+            client.write(f"/s/{i}", blob)
+            if i % 3 == 0:
+                client.read(f"/s/{i}")
+        pol = eng.policy
+        snap = gw.snapshot_stats()["engine"]["policy"]
+        assert snap["adaptive"] == 1
+        assert pol.rows_floor <= snap["max_fused_rows"] <= pol.rows_ceil
+        assert pol.bytes_floor <= snap["max_fused_bytes"] <= pol.bytes_ceil
+        assert 1 <= snap["octave_span"] <= 3
+        client.close()
+    finally:
+        gw.close()
+        eng.shutdown()
+
+
+def test_gateway_explicit_engine_policy_untouched(rng):
+    """An explicitly supplied engine keeps whatever fusion policy its
+    owner configured — the adaptive default only covers the engine the
+    gateway resolves itself."""
+    mgr, _ = make_store(4)
+    eng = CrystalTPU()
+    gw = _gateway(mgr, eng)                          # adaptive_fusion=True
+    try:
+        assert gw.engine is eng
+        assert not eng.policy.adaptive
+    finally:
+        gw.close()
+        eng.shutdown()
+
+
+def test_gateway_durable_data_dir_roundtrip(rng, tmp_path):
+    """GatewayConfig(data_dir=...): the gateway owns a WAL-backed store;
+    data written through one gateway incarnation survives into the
+    next."""
+    eng = CrystalTPU()
+    cfg = dict(sai=_sai_cfg(), data_dir=str(tmp_path),
+               n_nodes=3, replication=2)
+    blob = rng.integers(0, 256, 5 * 4096, dtype=np.uint8).tobytes()
+    gw = StorageGateway(engine=eng, config=GatewayConfig(**cfg))
+    try:
+        assert gw.recovery_report is not None
+        client = GatewayClient(gw, "t")
+        client.write("/durable/f", blob)
+        assert client.read("/durable/f") == blob
+    finally:
+        gw.close()                                   # closes owned store
+
+    gw2 = StorageGateway(engine=eng, config=GatewayConfig(**cfg))
+    try:
+        assert gw2.recovery_report.refcount_drift == 0
+        client2 = GatewayClient(gw2, "t")
+        assert client2.read("/durable/f") == blob    # survived restart
+    finally:
+        gw2.close()
+        eng.shutdown()
+
+
+def test_gateway_manager_xor_data_dir(tmp_path):
+    mgr, _ = make_store(2)
+    with pytest.raises(ValueError):
+        StorageGateway(mgr, config=GatewayConfig(
+            sai=_sai_cfg(), data_dir=str(tmp_path)))
+    with pytest.raises(ValueError):
+        StorageGateway(None, config=GatewayConfig(sai=_sai_cfg()))

@@ -1,0 +1,386 @@
+"""WAL framing, snapshot compaction, block-store persistence, and the
+fault-injection harness (ISSUE 7).
+
+The framing tests mirror the gateway codec-fuzz discipline
+(tests/test_gateway.py): hostile bytes — truncated length prefixes, bad
+CRCs, trailing garbage, zero-length records — must stop replay cleanly
+at the last good record, never surface ``struct.error``/``IndexError``.
+"""
+import os
+import random
+import struct
+import zlib
+
+import pytest
+
+from repro.core.blockstore import BlockStore
+from repro.core.faultinject import CrashPoint, FaultInjector, tear_tail
+from repro.core.wal import (MAX_RECORD_BYTES, WALError, WriteAheadLog,
+                            encode_frame, iter_frames)
+from repro.core import castore
+
+
+def _records(n, start=1):
+    return [(start + i, 1 + (i % 5), bytes([i % 251]) * (i % 37))
+            for i in range(n)]
+
+
+def _log_bytes(recs):
+    return b"".join(encode_frame(seq, kind, body)
+                    for seq, kind, body in recs)
+
+
+# ---------------------------------------------------------------------------
+# frame codec vs hostile bytes
+# ---------------------------------------------------------------------------
+
+def test_frame_roundtrip():
+    recs = _records(20)
+    out = [(s, k, b) for s, k, b, _ in iter_frames(_log_bytes(recs))]
+    assert out == recs
+
+
+def test_truncated_length_prefix_stops_cleanly():
+    buf = _log_bytes(_records(3))
+    # every truncation point inside the trailing frame's header
+    for cut in range(1, 8):
+        got = list(iter_frames(buf + buf[:cut]))
+        assert len(got) == 3           # never raises, never over-reads
+
+
+def test_truncated_payload_stops_at_last_good():
+    recs = _records(5)
+    buf = _log_bytes(recs)
+    tail = encode_frame(6, 1, b"x" * 100)
+    for cut in range(9, len(tail)):    # header present, payload short
+        got = list(iter_frames(buf + tail[:cut]))
+        assert [(s, k, b) for s, k, b, _ in got] == recs
+
+
+def test_bad_crc_stops_replay():
+    buf = bytearray(_log_bytes(_records(4)))
+    # flip one bit in the third frame's payload
+    frames = list(iter_frames(bytes(buf)))
+    third_start = frames[1][3]
+    buf[third_start + 12] ^= 0x40
+    got = list(iter_frames(bytes(buf)))
+    assert len(got) == 2
+
+
+def test_zero_length_record_stops_replay():
+    buf = _log_bytes(_records(2))
+    evil = struct.Struct("<II").pack(0, zlib.crc32(b""))
+    got = list(iter_frames(buf + evil + _log_bytes(_records(2, start=10))))
+    assert len(got) == 2               # zero-length stops; later valid
+    #                                    frames after the gap are NOT
+    #                                    trusted
+
+
+def test_giant_length_stops_replay():
+    buf = _log_bytes(_records(2))
+    evil = struct.Struct("<II").pack(MAX_RECORD_BYTES + 1, 0)
+    assert len(list(iter_frames(buf + evil + b"\x00" * 64))) == 2
+
+
+def test_non_monotonic_seq_stops_replay():
+    buf = _log_bytes([(1, 1, b"a"), (2, 1, b"b"), (2, 1, b"c")])
+    assert len(list(iter_frames(buf))) == 2
+
+
+def test_frame_fuzz_random_truncation_and_garbage():
+    """Codec-fuzz style: random truncations and random garbage tails
+    always yield a clean prefix of the original records."""
+    recs = _records(12)
+    buf = _log_bytes(recs)
+    r = random.Random(0)
+    for _ in range(200):
+        cut = r.randrange(len(buf) + 1)
+        junk = bytes(r.randrange(256) for _ in range(r.randrange(16)))
+        got = [(s, k, b) for s, k, b, _ in iter_frames(buf[:cut] + junk)]
+        assert got == recs[:len(got)]  # always a prefix, never a raise
+
+
+# ---------------------------------------------------------------------------
+# record payload codecs (castore semantics layer)
+# ---------------------------------------------------------------------------
+
+def test_record_codecs_roundtrip():
+    d1, d2 = os.urandom(16), os.urandom(16)
+    fv = castore.FileVersion(
+        blocks=[castore.BlockMeta(d1, 4096, (0, 2)),
+                castore.BlockMeta(d2, 100, (1,))],
+        total_len=4196, timestamp=123.5, merkle_root=os.urandom(16))
+    path, got = castore.dec_commit(castore.enc_commit("/a/b", fv))
+    assert path == "/a/b" and got.total_len == 4196
+    assert got.timestamp == 123.5 and got.merkle_root == fv.merkle_root
+    assert [(b.digest, b.length, b.nodes) for b in got.blocks] == \
+        [(d1, 4096, (0, 2)), (d2, 100, (1,))]
+
+    assert castore.dec_retire(castore.enc_retire("/x", 3)) == ("/x", 3)
+    assert castore.dec_digest_list(
+        castore.enc_digest_list([d1, d2])) == [d1, d2]
+    assert castore.dec_digest_nodes(
+        castore.enc_digest_nodes(d1, (1, 2))) == (d1, (1, 2))
+    assert castore.dec_digest_node(
+        castore.enc_digest_node(d2, 7)) == (d2, 7)
+
+
+def test_record_codecs_hostile_bytes_raise_walerror_only():
+    d = os.urandom(16)
+    bodies = [castore.enc_commit("/p", castore.FileVersion(
+                  blocks=[castore.BlockMeta(d, 10, (0,))], total_len=10,
+                  merkle_root=os.urandom(16))),
+              castore.enc_retire("/p", 1),
+              castore.enc_digest_list([d, os.urandom(16)]),
+              castore.enc_digest_nodes(d, (0, 1)),
+              castore.enc_digest_node(d, 3)]
+    decoders = [castore.dec_commit, castore.dec_retire,
+                castore.dec_digest_list, castore.dec_digest_nodes,
+                castore.dec_digest_node]
+    r = random.Random(1)
+    for body, dec in zip(bodies, decoders):
+        for cut in range(len(body)):
+            with pytest.raises(WALError):
+                dec(body[:cut])
+        with pytest.raises(WALError):       # trailing garbage
+            dec(body + b"\x00")
+        for _ in range(50):                 # random corruption
+            mut = bytearray(body)
+            for _ in range(r.randrange(1, 4)):
+                mut[r.randrange(len(mut))] = r.randrange(256)
+            try:
+                dec(bytes(mut))
+            except WALError:
+                pass                        # struct.error/IndexError fail
+
+
+def test_bad_record_kind_in_replay_counts_and_stops(tmp_path):
+    mgr, nodes, _ = castore.open_durable_store(str(tmp_path), n_nodes=1,
+                                               flush_interval_s=0)
+    mgr.wal.append(200, b"future-kind")     # unknown record kind
+    mgr.wal.append(castore.REC_RETIRE, b"\x01")  # truncated body
+    mgr.wal.crash()                         # die before compaction can
+    mgr.close()                             # tidy the junk tail away
+    mgr2, _, rep = castore.open_durable_store(str(tmp_path), n_nodes=1)
+    assert rep.bad_records == 1             # stopped at first bad record
+    mgr2.close()
+
+
+# ---------------------------------------------------------------------------
+# WriteAheadLog behaviour
+# ---------------------------------------------------------------------------
+
+def test_wal_append_sync_reopen(tmp_path):
+    wal = WriteAheadLog(str(tmp_path), flush_interval_s=0.001)
+    seqs = [wal.append(k % 3 + 1, bytes([k])) for k in range(50)]
+    assert seqs == list(range(1, 51))
+    wal.sync()
+    wal.close()
+    wal2 = WriteAheadLog(str(tmp_path))
+    assert [(s, b) for s, _, b in wal2.recovered_records] == \
+        [(k + 1, bytes([k])) for k in range(50)]
+    assert not wal2.torn_tail
+    assert wal2.append(1, b"more") == 51    # appends resume past tail
+    wal2.close()
+
+
+def test_wal_inline_fsync_mode(tmp_path):
+    wal = WriteAheadLog(str(tmp_path), flush_interval_s=0)
+    wal.append(1, b"a")
+    wal.sync()                              # immediate no-op
+    wal.close()
+    assert len(WriteAheadLog(str(tmp_path)).recovered_records) == 1
+
+
+def test_wal_torn_tail_truncated_on_reopen(tmp_path):
+    wal = WriteAheadLog(str(tmp_path), flush_interval_s=0)
+    for k in range(5):
+        wal.append(1, os.urandom(64))
+    log_path = wal._active_path
+    wal.close()
+    tear_tail(log_path, keep_frac=0.5)
+    wal2 = WriteAheadLog(str(tmp_path))
+    assert wal2.torn_tail
+    assert 0 < len(wal2.recovered_records) < 5
+    n = len(wal2.recovered_records)
+    wal2.append(2, b"after-tear")           # clean append boundary
+    wal2.close()
+    wal3 = WriteAheadLog(str(tmp_path))
+    assert len(wal3.recovered_records) == n + 1
+    assert wal3.recovered_records[-1][2] == b"after-tear"
+    wal3.close()
+
+
+def test_wal_snapshot_compacts_and_replays(tmp_path):
+    wal = WriteAheadLog(str(tmp_path), flush_interval_s=0)
+    for k in range(10):
+        wal.append(1, bytes([k]))
+    snap_seq = wal.snapshot(b"state-at-10")
+    assert snap_seq == 10 and wal.records_since_snapshot == 0
+    for k in range(3):
+        wal.append(2, bytes([100 + k]))
+    wal.close()
+    wal2 = WriteAheadLog(str(tmp_path))
+    assert wal2.recovered_snapshot == b"state-at-10"
+    assert wal2.recovered_seq == 10
+    assert [b for _, _, b in wal2.recovered_records] == \
+        [bytes([100 + k]) for k in range(3)]
+    # old log files were purged
+    logs = [n for n in os.listdir(str(tmp_path)) if n.startswith("wal-")]
+    assert len(logs) == 1
+    wal2.close()
+
+
+def test_wal_fsync_skip_loses_unwritten_records(tmp_path):
+    """A lying fsync (action='skip') reports durability but loses the
+    bytes with the process — recovery still lands on a clean prefix."""
+    fault = FaultInjector()
+    wal = WriteAheadLog(str(tmp_path), flush_interval_s=0, fault=fault)
+    wal.append(1, b"durable")
+    fault.arm("wal.fsync", action="skip", times=1000)
+    wal.append(1, b"lost-1")
+    wal.append(1, b"lost-2")
+    wal.sync()                              # "succeeds" — disk lied
+    wal.crash()
+    wal2 = WriteAheadLog(str(tmp_path))
+    assert [b for _, _, b in wal2.recovered_records] == [b"durable"]
+    wal2.close()
+
+
+def test_wal_crash_point_kill_after_n_records(tmp_path):
+    fault = FaultInjector()
+    wal = WriteAheadLog(str(tmp_path), flush_interval_s=0, fault=fault)
+    fault.kill_after("wal.append", 3)
+    wal.append(1, b"a")
+    wal.append(1, b"b")
+    with pytest.raises(CrashPoint):
+        wal.append(1, b"c")
+    with pytest.raises(CrashPoint):         # dead stays dead
+        wal.append(1, b"d")
+    wal2 = WriteAheadLog(str(tmp_path))
+    assert len(wal2.recovered_records) == 2
+    wal2.close()
+
+
+def test_wal_torn_append_action(tmp_path):
+    fault = FaultInjector()
+    wal = WriteAheadLog(str(tmp_path), flush_interval_s=0, fault=fault)
+    wal.append(1, b"good")
+    fault.arm("wal.append", action="torn")
+    with pytest.raises(CrashPoint):
+        wal.append(1, b"torn-record" * 10)
+    wal2 = WriteAheadLog(str(tmp_path))
+    assert wal2.torn_tail
+    assert [b for _, _, b in wal2.recovered_records] == [b"good"]
+    wal2.append(1, b"resumed")              # truncated to a clean boundary
+    wal2.close()
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector semantics
+# ---------------------------------------------------------------------------
+
+def test_fault_injector_when_filter_and_times():
+    inj = FaultInjector()
+    inj.arm("site", after=2, when={"kind": 7}, times=2, action="skip")
+    assert inj.fire("site", kind=1) is None      # non-matching: no count
+    assert inj.fire("site", kind=7) is None      # hit 1 of matching
+    assert inj.fire("site", kind=7) == "skip"    # hit 2 -> trigger
+    assert inj.fire("site", kind=7) == "skip"    # times=2
+    assert inj.fire("site", kind=7) is None      # exhausted
+    assert inj.hits["site"] == 5
+
+
+def test_fault_injector_callable_action():
+    inj = FaultInjector()
+    seen = []
+    inj.arm("s", action=lambda **ctx: seen.append(ctx) or "custom")
+    assert inj.fire("s", digest=b"x") == "custom"
+    assert seen[0]["digest"] == b"x"
+
+
+# ---------------------------------------------------------------------------
+# BlockStore persistence
+# ---------------------------------------------------------------------------
+
+def test_blockstore_roundtrip_and_dedup(tmp_path):
+    bs = BlockStore(str(tmp_path))
+    d1, d2 = os.urandom(16), os.urandom(16)
+    bs.put(d1, b"one")
+    bs.put(d2, b"two" * 100)
+    bs.put(d1, b"one")                      # content-addressed no-op
+    assert bs.stats["skipped_puts"] == 1
+    assert bs.get(d1) == b"one"             # served from the write buffer
+    bs.flush()
+    assert bs.get(d2) == b"two" * 100       # served from disk
+    assert sorted(bs.digests()) == sorted([d1, d2])
+    bs.close()
+    bs2 = BlockStore(str(tmp_path))         # scan re-derives the index
+    assert bs2.get(d1) == b"one"
+    assert bs2.get(d2) == b"two" * 100
+    assert set(bs2.suspects) <= {d1, d2}    # final-segment residents
+    bs2.close()
+
+
+def test_blockstore_replace_and_tombstone(tmp_path):
+    bs = BlockStore(str(tmp_path))
+    d = os.urandom(16)
+    bs.put(d, b"corrupt")
+    bs.put(d, b"repaired", replace=True)
+    assert bs.get(d) == b"repaired" and bs.stats["replaced"] == 1
+    d2 = os.urandom(16)
+    bs.put(d2, b"gone")
+    bs.drop(d2)
+    assert not bs.has(d2)
+    bs.close()
+    bs2 = BlockStore(str(tmp_path))
+    assert bs2.get(d) == b"repaired"        # later record wins the scan
+    assert not bs2.has(d2)                  # tombstone survived
+    bs2.close()
+
+
+def test_blockstore_segment_rotation_limits_suspects(tmp_path):
+    bs = BlockStore(str(tmp_path), segment_bytes=1024)
+    digs = [os.urandom(16) for _ in range(8)]
+    for d in digs:
+        bs.put(d, os.urandom(400))          # ~2 blocks per segment
+    bs.close()
+    bs2 = BlockStore(str(tmp_path), segment_bytes=1024)
+    assert sorted(bs2.digests()) == sorted(digs)
+    # only the FINAL segment's blocks are suspect — rotation fsyncs
+    assert 0 < len(bs2.suspects) < len(digs)
+    bs2.close()
+
+
+def test_blockstore_torn_segment_truncated(tmp_path):
+    bs = BlockStore(str(tmp_path))
+    d1, d2 = os.urandom(16), os.urandom(16)
+    bs.put(d1, b"a" * 200)
+    bs.put(d2, b"b" * 200)
+    bs.close()
+    seg = os.path.join(str(tmp_path), sorted(
+        n for n in os.listdir(str(tmp_path)) if n.startswith("seg-"))[-1])
+    tear_tail(seg, keep_frac=0.6)           # tear through d2's record
+    bs2 = BlockStore(str(tmp_path))
+    assert bs2.get(d1) == b"a" * 200
+    assert not bs2.has(d2)
+    assert bs2.stats["truncated_bytes"] > 0
+    d3 = os.urandom(16)
+    bs2.put(d3, b"after")                   # appends resume cleanly
+    bs2.flush()
+    assert bs2.get(d3) == b"after"
+    bs2.close()
+
+
+def test_blockstore_torn_put_action(tmp_path):
+    fault = FaultInjector()
+    bs = BlockStore(str(tmp_path), fault=fault)
+    d1 = os.urandom(16)
+    bs.put(d1, b"whole")
+    fault.arm("blockstore.put", action="torn")
+    with pytest.raises(CrashPoint):
+        bs.put(os.urandom(16), b"partial-segment-write" * 50)
+    bs2 = BlockStore(str(tmp_path))
+    assert bs2.get(d1) == b"whole"          # torn record truncated away
+    assert len(bs2.digests()) == 1
+    bs2.close()
