@@ -32,6 +32,10 @@ bench-smoke:
 		$(PYTHON) benchmarks/run.py \
 		fig4 fig11 read scrub recovery gateway mesh > bench-smoke.csv
 	@cat bench-smoke.csv
+	@grep -q '^gateway/latency_p99' bench-smoke.csv
+	@grep -q '^recovery/fsync_p95' bench-smoke.csv
+	@$(PYTHON) -c "import json; s = json.load(open('BENCH_smoke.json')); \
+		assert s.get('obs'), 'missing obs block in BENCH_smoke.json'"
 
 # engine-mesh ablation alone (1 vs 4 forced host devices, static vs
 # adaptive fusion); asserts the mesh rows actually landed in the CSV

@@ -31,6 +31,7 @@ import numpy as np
 
 from benchmarks.common import mbps, scaled
 from repro.core import CrystalTPU, SAIConfig, make_store
+from repro.obs import dump_slow_log
 from repro.serve.auth import TokenAuthenticator
 from repro.serve.storage_client import GatewayClient
 from repro.serve.storage_service import GatewayConfig, StorageGateway
@@ -60,6 +61,7 @@ def _client_burst(client: GatewayClient, datas, done, errors):
 def run() -> list:
     rows: list = []
     rng = np.random.default_rng(13)
+    slow_entries: list = []
     for n_clients in CLIENT_COUNTS:
         mgr, _ = make_store(4)
         engine = CrystalTPU(coalesce_window_s=0.02)
@@ -86,6 +88,7 @@ def run() -> list:
         elapsed = time.perf_counter() - t0
         stats = gw.snapshot_stats()
         eng_stats = engine.snapshot_stats()
+        slow_entries.extend(gw.tracer.slow_entries())
         gw.close()
         engine.shutdown()
         assert not errors, errors
@@ -115,18 +118,33 @@ def run() -> list:
                 ds["ewma_launch_s"] * 1e6,
                 f"jobs={ds['jobs']}_launches={ds['launches']}_"
                 f"bytes={ds['bytes']}_queue_depth={ds['queue_depth']}"))
+        # request-latency distribution rows (observability plane): the
+        # gateway's log-bucketed write histogram, as p50/p95/p99
+        wsum = stats["obs"]["request"]["write"]
+        for p in (50, 95, 99):
+            p_s = wsum[f"p{p}_s"]
+            rows.append((
+                f"gateway/latency_p{p}/{n_clients}c", p_s * 1e6,
+                f"p{p}_ms={p_s * 1e3:.3f}_count={wsum['count']}"))
         if rates:
             fair = min(rates.values()) / max(max(rates.values()), 1e-9)
             rows.append((f"gateway/fairness/{n_clients}c", fair * 1e6,
                          f"min_over_max={fair:.2f}"))
-    rows.extend(_socket_mode(rng, SOCKET_CLIENTS))
-    # the smoke CI contract: per-tenant + socket rows MUST be present
+    rows.extend(_socket_mode(rng, SOCKET_CLIENTS, slow_entries))
+    # requests that crossed the gateway's slow threshold, as a span-tree
+    # dump CI uploads when non-empty
+    if dump_slow_log(slow_entries, "obs-slowlog.json"):
+        rows.append(("gateway/slow_requests", float(len(slow_entries)),
+                     f"dumped={len(slow_entries)}"))
+    # the smoke CI contract: per-tenant + socket + percentile rows MUST
+    # be present
     assert any(name.startswith("gateway/tenant_") for name, _, _ in rows)
     assert any(name.startswith("gateway/socket_") for name, _, _ in rows)
+    assert any(name.startswith("gateway/latency_p99") for name, _, _ in rows)
     return rows
 
 
-def _socket_mode(rng, n_clients: int) -> list:
+def _socket_mode(rng, n_clients: int, slow_entries: list) -> list:
     """The same burst over localhost TCP with tenant auth: every client
     opens its own GatewayServer connection with a signed token, and the
     engine's ``launches < jobs`` across those connections is the
@@ -161,6 +179,7 @@ def _socket_mode(rng, n_clients: int) -> list:
         c.close()
     stats = gw.snapshot_stats()
     conn = server.snapshot_stats()
+    slow_entries.extend(gw.tracer.slow_entries())
     server.close()
     gw.close()
     engine.shutdown()

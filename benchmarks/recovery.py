@@ -79,9 +79,17 @@ def run() -> list:
         t_dur = min(_burst(sai1, burst, tag=f"burst{r}")
                     for r in range(REPEATS))
         sai1.close()
+        wal_stats = mgr1.wal.snapshot_stats()
         mgr1.close()
     finally:
         shutil.rmtree(data_dir, ignore_errors=True)
+    # group-commit fsync distribution (observability plane): the WAL's
+    # log-bucketed fsync histogram, as p50/p95/p99
+    fsum = wal_stats["fsync_hist"]
+    for p in (50, 95, 99):
+        p_s = fsum[f"p{p}_s"]
+        rows.append((f"recovery/fsync_p{p}", p_s * 1e6,
+                     f"p{p}_ms={p_s * 1e3:.3f}_count={fsum['count']}"))
     ratio = t_dur / max(t_mem, 1e-9)
     ok = int(ratio <= 2.0)
     rows.append((f"recovery/write_durable1/{N_FILES}x{FILE_KB}KB",

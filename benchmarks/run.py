@@ -49,6 +49,11 @@ def _write_json(path: str, rows, modules) -> None:
     for name, us, derived in rows:
         for key, val in _KV.findall(str(derived)):
             counters[f"{name}.{key}"] = float(val)
+    # latency-distribution rows (gateway request p50/p95/p99, WAL fsync
+    # percentiles) folded into their own block so dashboards don't have
+    # to regex the row names back apart
+    obs = {name: us for name, us, _ in rows
+           if "/latency_p" in name or "/fsync_p" in name}
     summary = {
         "schema": 1,
         "smoke": os.environ.get("BENCH_SMOKE", "0") not in ("", "0"),
@@ -56,6 +61,7 @@ def _write_json(path: str, rows, modules) -> None:
         "rows": [{"name": n, "us_per_call": u, "derived": d}
                  for n, u, d in rows],
         "counters": counters,
+        "obs": obs,
     }
     with open(path, "w") as fh:
         json.dump(summary, fh, indent=1, sort_keys=True)

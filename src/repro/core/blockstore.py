@@ -31,6 +31,8 @@ import struct
 import threading
 from typing import Dict, List, Optional, Tuple
 
+from repro.obs import MetricsRegistry
+
 from .faultinject import CrashPoint, FaultInjector
 
 _REC = struct.Struct("<IBI16s")
@@ -59,9 +61,10 @@ class BlockStore:
         # digest -> (seg_id, data_offset, length)
         self._index: Dict[bytes, Tuple[int, int, int]] = {}
         self._handles: Dict[int, object] = {}
-        self.stats = {"puts": 0, "skipped_puts": 0, "replaced": 0,
-                      "drops": 0, "flushes": 0, "truncated_bytes": 0,
-                      "scanned_records": 0}
+        self.metrics = MetricsRegistry()
+        self.stats = self.metrics.group(
+            ("puts", "skipped_puts", "replaced", "drops", "flushes",
+             "truncated_bytes", "scanned_records"))
         self.suspects: List[bytes] = []
         self._scan()
 
@@ -98,17 +101,17 @@ class BlockStore:
                         break
                     self._index.pop(digest, None)
                     off += _REC.size
-                    self.stats["scanned_records"] += 1
+                    self.stats.inc("scanned_records")
                     continue
                 end = off + _REC.size + length
                 if length > self.segment_bytes * 4 or end > size:
                     break       # torn data tail
                 self._index[digest] = (seg_id, off + _REC.size, length)
                 last_seg_digests.append(digest)
-                self.stats["scanned_records"] += 1
+                self.stats.inc("scanned_records")
                 off = end
             if off != size:     # torn tail: drop the garbage
-                self.stats["truncated_bytes"] += size - off
+                self.stats.inc("truncated_bytes", size - off)
                 with open(full, "r+b") as fh:
                     fh.truncate(off)
         if seg_ids:
@@ -180,7 +183,7 @@ class BlockStore:
         self._buf_base += len(self._buf)
         self._buf.clear()
         self._pending.clear()
-        self.stats["flushes"] += 1
+        self.stats.inc("flushes")
 
     # ------------------------------------------------------------ API
 
@@ -193,7 +196,7 @@ class BlockStore:
         with self._lock:
             self._check_alive()
             if digest in self._index and not replace:
-                self.stats["skipped_puts"] += 1
+                self.stats.inc("skipped_puts")
                 return
             act = self._fire("blockstore.put", digest=digest)
             rec = _REC.pack(MAGIC, F_BLOCK, len(data), digest) + bytes(data)
@@ -209,13 +212,13 @@ class BlockStore:
                 self._crashed = True
                 raise CrashPoint("blockstore.put:torn", -1)
             if digest in self._index:
-                self.stats["replaced"] += 1
+                self.stats.inc("replaced")
             off = self._cur_size
             self._buf += rec
             self._pending[digest] = bytes(data)
             self._index[digest] = (self._cur_seg, off + _REC.size, len(data))
             self._cur_size += len(rec)
-            self.stats["puts"] += 1
+            self.stats.inc("puts")
             if self._cur_size >= self.segment_bytes:
                 self._rotate_locked()
 
@@ -268,13 +271,16 @@ class BlockStore:
             self._cur_size += len(rec)
             self._index.pop(digest, None)
             self._pending.pop(digest, None)
-            self.stats["drops"] += 1
+            self.stats.inc("drops")
 
     def flush(self):
         """Write + fsync buffered records (WAL pre-sync hook target)."""
         with self._lock:
             self._check_alive()
             self._flush_locked()
+
+    def snapshot_stats(self) -> dict:
+        return dict(self.stats)
 
     def used_bytes(self) -> int:
         with self._lock:

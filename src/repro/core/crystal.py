@@ -110,6 +110,7 @@ import jax
 import numpy as np
 
 from repro.kernels import ops
+from repro.obs import metrics as metrics_mod
 
 
 LANES = ("fg", "batch", "scrub")       # dequeue priority, highest first
@@ -203,6 +204,12 @@ class Job:                             # numpy fields, and the manager's
     # clock at submit and credited back when the launch retires
     cost_est: float = 0.0
     device_index: int = -1
+    # trace stamps (perf_counter): dispatch enqueue, batch launch
+    # start/end — consumers (SAI) turn these into engine queue/launch
+    # spans after wait()
+    t_submit: float = 0.0
+    t_exec0: float = 0.0
+    t_exec1: float = 0.0
 
     def wait(self):
         self.done.wait()
@@ -410,9 +417,10 @@ class _DeviceState:
 
     __slots__ = ("index", "device", "queue", "queued_bytes", "pending_s",
                  "slowdown", "last_fuse_key", "picked", "ewma_launch_s",
-                 "ewma_bucket_s", "jobs", "launches", "bytes", "restarts")
+                 "ewma_bucket_s", "jobs", "launches", "bytes", "restarts",
+                 "launch_hist")
 
-    def __init__(self, index: int, device):
+    def __init__(self, index: int, device, launch_hist=None):
         self.index = index
         self.device = device
         self.queue = LaneQueue()
@@ -427,6 +435,10 @@ class _DeviceState:
         self.launches = 0
         self.bytes = 0
         self.restarts = 0
+        # full launch-latency distribution (p50/p95/p99), not just the
+        # EWMA mean the dispatcher scores with
+        self.launch_hist = launch_hist if launch_hist is not None \
+            else metrics_mod.Histogram(f"device{index}/launch_s")
 
     def load_score(self) -> float:
         return self.pending_s * self.slowdown
@@ -437,6 +449,7 @@ class _DeviceState:
                 "ewma_launch_s": self.ewma_launch_s,
                 "ewma_bucket_s": {f"{k}/{w}": v for (k, w), v
                                   in self.ewma_bucket_s.items()},
+                "launch_hist": self.launch_hist.summary(),
                 "queue_depth": self.queue.depth(),
                 "queued_bytes": self.queued_bytes,
                 "pending_s": self.pending_s,
@@ -531,12 +544,13 @@ class CrystalTPU:
         self.running: List[Job] = []
         self._lock = threading.Lock()
         self._rr = 0
-        self.stats = {"jobs": 0, "bytes": 0, "launches": 0,
-                      "coalesced": 0, "max_fused": 0,
-                      "scrub_jobs": 0, "scrub_launches": 0,
-                      "scrub_coalesced": 0,
-                      "sharded_jobs": 0, "shards": 0,
-                      "manager_restarts": 0}
+        self.metrics = metrics_mod.MetricsRegistry()
+        # atomic counters: manager threads and submitters bump these
+        # concurrently; reads keep the old plain-dict shape
+        self.stats = self.metrics.group(
+            ("jobs", "bytes", "launches", "coalesced", "max_fused",
+             "scrub_jobs", "scrub_launches", "scrub_coalesced",
+             "sharded_jobs", "shards", "manager_restarts"))
         # test hooks: _fault_hook(dev_index, batch) runs after a batch is
         # drained but OUTSIDE the launch try (an exception there kills
         # the manager thread -> crash-recovery path); _launch_hook runs
@@ -544,8 +558,10 @@ class CrystalTPU:
         # an exception fails only that batch)
         self._fault_hook: Optional[Callable] = None
         self._launch_hook: Optional[Callable] = None
-        self._dev_states = [_DeviceState(i, d)
-                            for i, d in enumerate(self.devices)]
+        self._dev_states = [
+            _DeviceState(i, d,
+                         self.metrics.histogram(f"device{i}/launch_s"))
+            for i, d in enumerate(self.devices)]
         self._managers = [
             threading.Thread(target=self._manager_main, args=(s,),
                              daemon=True, name=f"crystal-mgr-{s.index}")
@@ -663,6 +679,7 @@ class CrystalTPU:
             tgt.last_fuse_key = job.fuse_key
             job.device_index = tgt.index
             q = tgt.queue
+        job.t_submit = time.perf_counter()
         q.put(job, lane=job.lane)
         return job
 
@@ -729,9 +746,8 @@ class CrystalTPU:
                                        dict(parent.meta), child_cb(i),
                                        parent.lane)
             children.append(child)
-        with self._lock:
-            self.stats["sharded_jobs"] += 1
-            self.stats["shards"] += k
+        self.stats.inc("sharded_jobs")
+        self.stats.inc("shards", k)
         for child in children:
             self._dispatch(child, spread=True)
         return parent
@@ -756,6 +772,12 @@ class CrystalTPU:
             for kk, v in (c.timings or {}).items():
                 merged[kk] = max(merged.get(kk, 0.0), v)
         parent.timings = merged
+        # trace stamps span the union of the children's execution
+        executed = [c for c in results if c.t_exec1 > 0.0]
+        if executed:
+            parent.t_submit = min(c.t_submit for c in executed)
+            parent.t_exec0 = min(c.t_exec0 for c in executed)
+            parent.t_exec1 = max(c.t_exec1 for c in executed)
         parent.done.set()
         if parent.callback is not None:
             try:
@@ -929,10 +951,11 @@ class CrystalTPU:
                 for j in batch:
                     j.error = e
             finally:
-                self._retire(dev, batch, time.perf_counter() - wall0,
-                             failed)
+                wall1 = time.perf_counter()
+                self._retire(dev, batch, wall1 - wall0, failed)
                 self._put_slot(slot)
                 for j in batch:
+                    j.t_exec0, j.t_exec1 = wall0, wall1
                     j.done.set()
                     if j.callback is not None:
                         try:
@@ -968,6 +991,7 @@ class CrystalTPU:
             self.cost.observe(kind, padded, wall_s)
             oh, spb = self.cost.params(kind)
             self.policy.observe(padded, actual, n_rows, wall_s, oh, spb)
+            dev.launch_hist.record(wall_s)
             key = (kind, wbucket)
             prev = dev.ewma_bucket_s.get(key)
             dev.ewma_bucket_s[key] = wall_s if prev is None \
@@ -984,7 +1008,7 @@ class CrystalTPU:
         mesh has no other device), and count the restart."""
         with self._lock:
             picked, dev.picked = dev.picked, []
-            self.stats["manager_restarts"] += 1
+            self.stats.inc("manager_restarts")
             dev.restarts += 1
             for j in picked:
                 dev.pending_s = max(dev.pending_s - j.cost_est, 0.0)
@@ -1019,21 +1043,21 @@ class CrystalTPU:
 
     def _account(self, dev: _DeviceState, n_jobs: int, nbytes: int,
                  n_scrub: int = 0):
+        self.stats.inc("jobs", n_jobs)
+        self.stats.inc("bytes", nbytes)
+        self.stats.inc("launches")
+        self.stats.inc("coalesced", n_jobs - 1)
+        self.stats.max_update("max_fused", n_jobs)
         with self._lock:
-            self.stats["jobs"] += n_jobs
-            self.stats["bytes"] += nbytes
-            self.stats["launches"] += 1
-            self.stats["coalesced"] += n_jobs - 1
-            self.stats["max_fused"] = max(self.stats["max_fused"], n_jobs)
             dev.jobs += n_jobs
             dev.launches += 1
             dev.bytes += nbytes
-            if n_scrub:
-                # a launch containing any scrub job counts once, so
-                # scrub_launches < scrub_jobs is the fused-scrub signature
-                self.stats["scrub_jobs"] += n_scrub
-                self.stats["scrub_launches"] += 1
-                self.stats["scrub_coalesced"] += n_scrub - 1
+        if n_scrub:
+            # a launch containing any scrub job counts once, so
+            # scrub_launches < scrub_jobs is the fused-scrub signature
+            self.stats.inc("scrub_jobs", n_scrub)
+            self.stats.inc("scrub_launches")
+            self.stats.inc("scrub_coalesced", n_scrub - 1)
 
     # -- fused direct batch --------------------------------------------
     def _execute_direct(self, dev: _DeviceState, slot: dict,

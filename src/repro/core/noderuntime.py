@@ -55,6 +55,7 @@ from typing import Dict, List, Optional
 
 from repro.core import integrity
 from repro.core.castore import MetadataManager, NodeFailure, StorageNode
+from repro.obs import MetricsRegistry
 from repro.core.crystal import CrystalTPU
 from repro.core import crystal as crystal_mod
 from repro.core.sai import pack_blocks
@@ -170,14 +171,12 @@ class ClusterRuntime:
         self._resume = threading.Event()
         self._resume.set()
         self._threads: List[threading.Thread] = []
-        self._stats_lock = threading.Lock()
-        self.stats: Dict[str, int] = {
-            "scrubbed_blocks": 0, "corrupt_found": 0,
-            "repairs_enqueued": 0, "repaired_copies": 0,
-            "repair_lost": 0, "gc_collected": 0,
-            "merkle_checks": 0, "merkle_failures": 0,
-            "scrub_backoffs": 0,
-        }
+        self._stats_lock = threading.Lock()   # guards _gc_pending
+        self.metrics = MetricsRegistry()
+        self.stats = self.metrics.group(
+            ("scrubbed_blocks", "corrupt_found", "repairs_enqueued",
+             "repaired_copies", "repair_lost", "gc_collected",
+             "merkle_checks", "merkle_failures", "scrub_backoffs"))
         manager.add_quarantine_listener(self._on_quarantine)
         manager.add_retire_listener(self._on_retire)
 
@@ -191,9 +190,8 @@ class ClusterRuntime:
         return self._engine
 
     def _bump(self, **deltas: int):
-        with self._stats_lock:
-            for k, v in deltas.items():
-                self.stats[k] += v
+        for k, v in deltas.items():
+            self.stats.inc(k, v)
 
     def _gate(self) -> bool:
         """Respect pause/stop between scrub bursts.  True = proceed."""
@@ -476,8 +474,7 @@ class ClusterRuntime:
         """Runtime counters merged with the engine's scrub-lane
         coalescing counters (scrub_jobs / scrub_launches /
         scrub_coalesced)."""
-        with self._stats_lock:
-            out = dict(self.stats)
+        out = dict(self.stats)
         out.update({"scrub_jobs": 0, "scrub_launches": 0,
                     "scrub_coalesced": 0})
         if self._engine is not None and self._engine._alive:

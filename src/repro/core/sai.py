@@ -73,6 +73,7 @@ from repro.core import crystal as crystal_mod
 from repro.core import integrity
 from repro.core.castore import BlockMeta, MetadataManager, NodeFailure
 from repro.core.crystal import CrystalTPU
+from repro.obs import MetricsRegistry, Trace
 
 
 @dataclass
@@ -217,6 +218,21 @@ class _HashHandle:
         return self._digests
 
 
+def _trace_engine_jobs(trace: "Trace", handle: _HashHandle) -> None:
+    """Turn the engine jobs' t_submit/t_exec stamps into
+    engine/queue + engine/launch spans (per device, per lane).  Only
+    meaningful after ``handle.wait()``; cpu/infinite hashers have no
+    engine jobs and contribute no spans."""
+    for job in handle._jobs:
+        if job.t_exec1 <= 0.0:
+            continue
+        if job.t_submit > 0.0:
+            trace.add_span("engine/queue", job.t_submit, job.t_exec0,
+                           device=job.device_index, lane=job.lane)
+        trace.add_span("engine/launch", job.t_exec0, job.t_exec1,
+                       device=job.device_index, lane=job.lane)
+
+
 _ORACLE_COUNTER = [0]
 _ORACLE_LOCK = threading.Lock()
 # ca='none' digests are synthetic, not content-derived: a per-process
@@ -237,10 +253,12 @@ class SAI:
         self._cache: "OrderedDict[bytes, bytes]" = OrderedDict()
         self._cache_used = 0
         self._cache_lock = threading.Lock()
-        self.read_stats: Dict[str, int] = {"cache_hits": 0,
-                                           "cache_misses": 0,
-                                           "refetches": 0,
-                                           "cache_invalidations": 0}
+        # atomic counters: concurrent read_async verify/fetch threads
+        # bump these without holding the cache lock
+        self.metrics = MetricsRegistry()
+        self.read_stats = self.metrics.group(
+            ("cache_hits", "cache_misses", "refetches",
+             "cache_invalidations"))
         # a quarantine anywhere in a digest's replica set condemns the
         # cached copy too: the entry was verified at insertion, but its
         # provenance is now suspect, so the next read must re-fetch and
@@ -363,7 +381,8 @@ class SAI:
     # ------------------------------------------------------------------
     def _store_chunks(self, path: str, total_len: int,
                       chunks: List[bytes], digests: List[bytes],
-                      stats: WriteStats) -> WriteStats:
+                      stats: WriteStats,
+                      trace: Optional[Trace] = None) -> WriteStats:
         """Dedup against the indexed digest->locations registry, store
         novel blocks, commit the block-map.
 
@@ -412,7 +431,11 @@ class SAI:
                 blocks.append(BlockMeta(digest, len(chunk), tuple(locs)))
             seq = mgr.commit_blockmap(path, blocks, total_len)
             if self.cfg.durable_sync and seq is not None:
+                t0 = time.perf_counter()
                 mgr.wait_durable(seq)
+                if trace is not None:
+                    trace.add_span("wal/commit", t0, time.perf_counter(),
+                                   seq=seq)
         finally:
             mgr.unpin_blocks(digests)
         return stats
@@ -499,17 +522,22 @@ class SAI:
                          "store": t3 - t2}
         return stats
 
-    def write_async(self, path: str, data: bytes) -> WriteFuture:
+    def write_async(self, path: str, data: bytes,
+                    trace: Optional[Trace] = None) -> WriteFuture:
         """Pipelined write: chunk+hash of this write overlap the store
         stage of the previous one (and hash requests from back-to-back
         writes coalesce in the engine).  The store stage is sharded into
         per-path commit lanes, so writers to different paths commit in
         parallel; commit order matches submission order per path, so
-        versioning is identical to sequential sync writes."""
+        versioning is identical to sequential sync writes.
+
+        ``trace`` (an ``obs.Trace``) rides the pipeline queues and
+        collects sai/chunk, sai/hash, sai/store, engine queue/launch,
+        and wal/commit spans."""
         fut = WriteFuture()
         with self._pipe_lock:
             self._ensure_pipeline()
-            self._chunk_q.put((fut, path, bytes(data)))
+            self._chunk_q.put((fut, path, bytes(data), trace))
         return fut
 
     def flush(self):
@@ -575,21 +603,24 @@ class SAI:
                     q.put(None)
                 chunk_q.task_done()
                 return
-            fut, path, data = item
+            fut, path, data, trace = item
             # per-path lane: commits for one path stay FIFO while
             # different paths commit on parallel lanes
             store_q = store_qs[hash(path) % len(store_qs)]
             try:
                 if self.cfg.ca == "none":
-                    store_q.put((fut, path, data, None, None, {}))
+                    store_q.put((fut, path, data, None, None, {}, trace))
                     continue
                 t0 = time.perf_counter()
                 bounds = self._boundaries(data)
                 chunks = chunking.split_chunks(data, bounds)
                 t1 = time.perf_counter()
+                if trace is not None:
+                    trace.add_span("sai/chunk", t0, t1,
+                                   chunks=len(chunks))
                 handle = self._submit_hash(chunks)   # non-blocking (tpu)
                 store_q.put((fut, path, data, chunks, handle,
-                             {"chunk": t1 - t0, "t_hash0": t1}))
+                             {"chunk": t1 - t0, "t_hash0": t1}, trace))
             except BaseException as e:
                 fut._fail(e)
             finally:
@@ -601,7 +632,7 @@ class SAI:
             if item is None:                         # close() sentinel
                 store_q.task_done()
                 return
-            fut, path, data, chunks, handle, times = item
+            fut, path, data, chunks, handle, times, trace = item
             try:
                 if handle is None:                   # ca='none'
                     fut._resolve(self._write_raw(path, data))
@@ -609,9 +640,14 @@ class SAI:
                 stats = WriteStats(total_bytes=len(data))
                 digests = handle.wait()
                 t2 = time.perf_counter()
+                if trace is not None:
+                    trace.add_span("sai/hash", times["t_hash0"], t2)
+                    _trace_engine_jobs(trace, handle)
                 self._store_chunks(path, len(data), chunks, digests,
-                                   stats)
+                                   stats, trace=trace)
                 t3 = time.perf_counter()
+                if trace is not None:
+                    trace.add_span("sai/store", t2, t3)
                 hash_s = 0.0 if self.cfg.hasher == "infinite" \
                     else t2 - times["t_hash0"]
                 stats.stage_s = {"chunk": times["chunk"],
@@ -642,10 +678,10 @@ class SAI:
         with self._cache_lock:
             data = self._cache.get(digest)
             if data is None:
-                self.read_stats["cache_misses"] += 1
+                self.read_stats.inc("cache_misses")
                 return None
             self._cache.move_to_end(digest)
-            self.read_stats["cache_hits"] += 1
+            self.read_stats.inc("cache_hits")
             return data
 
     def _on_quarantine_evict(self, digest: bytes, node_id: int,
@@ -654,7 +690,7 @@ class SAI:
             data = self._cache.pop(digest, None)
             if data is not None:
                 self._cache_used -= len(data)
-                self.read_stats["cache_invalidations"] += 1
+                self.read_stats.inc("cache_invalidations")
 
     def _cache_put(self, digest: bytes, data: bytes):
         cap = self.cfg.read_cache_bytes
@@ -782,8 +818,7 @@ class SAI:
             except (NodeFailure, KeyError):
                 continue
             if self._hash_chunks([data])[0] == b.digest:
-                with self._cache_lock:
-                    self.read_stats["refetches"] += 1
+                self.read_stats.inc("refetches")
                 datas[i] = data
                 srcs[i] = nid
                 return
@@ -882,16 +917,17 @@ class SAI:
         return buf[offset - start0:end - start0]
 
     def read_async(self, path: str, version: int = -1,
-                   verify: bool = True) -> ReadFuture:
+                   verify: bool = True,
+                   trace: Optional[Trace] = None) -> ReadFuture:
         """Pipelined read: fetch -> verify -> assemble as staged threads.
         The verify stage of read i (waiting on the engine digest) overlaps
         the fetch stage of read i+1, and verify requests from concurrent
         readers coalesce into common batch launches through the shared
-        engine."""
+        engine.  ``trace`` collects sai/fetch + sai/verify spans."""
         fut = ReadFuture()
         with self._pipe_lock:
             self._ensure_read_pipeline()
-            self._fetch_q.put((fut, path, version, verify))
+            self._fetch_q.put((fut, path, version, verify, trace))
         return fut
 
     def _ensure_read_pipeline(self):
@@ -918,19 +954,23 @@ class SAI:
                 verify_q.put(None)
                 fetch_q.task_done()
                 return
-            fut, path, version, verify = item
+            fut, path, version, verify, trace = item
             try:
+                t0 = time.perf_counter()
                 fv, locmap = self.manager.get_read_plan(path, version)
                 if fv is None:
                     raise FileNotFoundError(path)
                 datas, srcs = self._fetch_blocks(fv.blocks, locmap)
+                if trace is not None:
+                    trace.add_span("sai/fetch", t0, time.perf_counter(),
+                                   blocks=len(fv.blocks))
                 if verify:
                     handles, idxs = self._submit_verify(fv.blocks, datas,
                                                         srcs)
                 else:
                     handles, idxs = None, []
                 verify_q.put((fut, fv, datas, srcs, handles, idxs,
-                              locmap))
+                              locmap, trace))
             except BaseException as e:
                 fut._fail(e)
             finally:
@@ -942,11 +982,17 @@ class SAI:
             if item is None:                         # close() sentinel
                 verify_q.task_done()
                 return
-            fut, fv, datas, srcs, handles, idxs, locmap = item
+            fut, fv, datas, srcs, handles, idxs, locmap, trace = item
             try:
                 if handles is not None:
+                    t0 = time.perf_counter()
                     self._finish_verify(fv.blocks, datas, srcs, handles,
                                         idxs, locmap)
+                    if trace is not None:
+                        trace.add_span("sai/verify", t0,
+                                       time.perf_counter())
+                        for h in handles:
+                            _trace_engine_jobs(trace, h)
                 fut._resolve(b"".join(datas)[:fv.total_len])
             except BaseException as e:
                 fut._fail(e)

@@ -45,8 +45,11 @@ from __future__ import annotations
 import os
 import struct
 import threading
+import time
 import zlib
 from typing import Any, Callable, Iterator, List, Optional, Tuple
+
+from repro.obs import MetricsRegistry
 
 from .faultinject import CrashPoint, FaultInjector
 
@@ -146,8 +149,12 @@ class WriteAheadLog:
         self._pending_seq = 0
         self._flushed_seq = 0
         self._records_since_snap = 0
-        self.stats = {"appends": 0, "fsyncs": 0, "snapshots": 0,
-                      "flush_waits": 0}
+        self.metrics = MetricsRegistry()
+        self.stats = self.metrics.group(
+            ("appends", "fsyncs", "snapshots", "flush_waits"))
+        # group-commit fsync latency distribution (the durability tax a
+        # blocked sync() waiter actually pays)
+        self._fsync_hist = self.metrics.histogram("fsync_s")
 
         self.recovered_snapshot: Optional[bytes] = None
         self.recovered_seq = 0          # seq of the recovered snapshot
@@ -252,7 +259,7 @@ class WriteAheadLog:
             self._buf += frame
             self._pending_seq = seq
             self._records_since_snap += 1
-            self.stats["appends"] += 1
+            self.stats.inc("appends")
             if self.flush_interval_s <= 0:
                 self._flush_locked()
             else:
@@ -277,7 +284,7 @@ class WriteAheadLog:
                 if self._flusher is None or not self._flusher.is_alive():
                     self._flush_locked()
                     break
-                self.stats["flush_waits"] += 1
+                self.stats.inc("flush_waits")
                 self._cv.wait(timeout=grace)
                 if self._flushed_seq < target:
                     self._check_alive()
@@ -291,6 +298,13 @@ class WriteAheadLog:
     @property
     def records_since_snapshot(self) -> int:
         return self._records_since_snap
+
+    def snapshot_stats(self) -> dict:
+        """Counters plus the group-commit fsync latency histogram
+        (count/sum/max/p50/p95/p99 in seconds)."""
+        out = dict(self.stats)
+        out["fsync_hist"] = self._fsync_hist.summary()
+        return out
 
     # ------------------------------------------------------------ flushing
 
@@ -318,9 +332,11 @@ class WriteAheadLog:
             # simulated crash genuinely loses them
             self._buf_skipped = True
         else:
+            t0 = time.perf_counter()
             self._write_out(bytes(self._buf), do_fsync=True)
+            self._fsync_hist.record(time.perf_counter() - t0)
             self._buf.clear()
-            self.stats["fsyncs"] += 1
+            self.stats.inc("fsyncs")
         self._flushed_seq = self._pending_seq
         self._cv.notify_all()
 
@@ -377,7 +393,7 @@ class WriteAheadLog:
                 self.path, f"{_LOG_PREFIX}{seq + 1:020d}{_LOG_SUFFIX}")
             self._fh = open(self._active_path, "ab")
             self._records_since_snap = 0
-            self.stats["snapshots"] += 1
+            self.stats.inc("snapshots")
             # purge only after the new snapshot is in place
             for name in os.listdir(self.path):
                 full = os.path.join(self.path, name)

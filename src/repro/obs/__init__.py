@@ -1,0 +1,25 @@
+"""Unified observability plane: metrics, traces, exporters.
+
+``obs`` is dependency-free (stdlib only) so every layer — engine, SAI,
+WAL, block store, node runtime, gateway, transport — can import it
+without cycles.  See docs/OBSERVABILITY.md for the metric-name table
+and trace span hierarchy.
+"""
+
+from .metrics import Counter, CounterGroup, Gauge, Histogram, MetricsRegistry
+from .trace import Span, Trace, Tracer
+from .export import dump_slow_log, flatten, prometheus_text
+
+__all__ = [
+    "Counter",
+    "CounterGroup",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "Span",
+    "Trace",
+    "Tracer",
+    "dump_slow_log",
+    "flatten",
+    "prometheus_text",
+]

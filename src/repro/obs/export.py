@@ -1,0 +1,69 @@
+"""Exposition helpers: Prometheus text format + slow-log dumps.
+
+The gateway's ``snapshot_stats()`` is a nested JSON-safe tree (gateway
++ engine ``per_device`` + runtime + WAL + blockstore + obs).
+``flatten`` walks it into ``path/to/leaf -> number`` pairs and
+``prometheus_text`` renders those as one-metric-per-line text
+exposition, so any scraper can consume the same snapshot the
+``OP_STATS`` wire verb returns.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict, List, Mapping
+
+_NAME_BAD = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def flatten(tree: Mapping, prefix: str = "") -> Dict[str, float]:
+    """Flatten a nested stats tree to {joined/key: numeric leaf}."""
+    out: Dict[str, float] = {}
+    for key, value in tree.items():
+        path = f"{prefix}/{key}" if prefix else str(key)
+        if isinstance(value, Mapping):
+            out.update(flatten(value, path))
+        elif isinstance(value, bool):
+            out[path] = 1.0 if value else 0.0
+        elif isinstance(value, (int, float)):
+            out[path] = float(value)
+        elif isinstance(value, (list, tuple)):
+            for i, item in enumerate(value):
+                if isinstance(item, Mapping):
+                    out.update(flatten(item, f"{path}/{i}"))
+                elif isinstance(item, (int, float)) and not isinstance(item, bool):
+                    out[f"{path}/{i}"] = float(item)
+        # strings and other non-numeric leaves are dropped from exposition
+    return out
+
+
+def metric_name(path: str, namespace: str = "repro") -> str:
+    name = _NAME_BAD.sub("_", path.replace("/", "_"))
+    return f"{namespace}_{name}" if namespace else name
+
+
+def prometheus_text(tree: Mapping, namespace: str = "repro") -> str:
+    """Render a nested stats tree as Prometheus text exposition."""
+    lines: List[str] = []
+    for path, value in sorted(flatten(tree).items()):
+        if value == int(value) and abs(value) < 2**53:
+            rendered = str(int(value))
+        else:
+            rendered = repr(value)
+        lines.append(f"{metric_name(path, namespace)} {rendered}")
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+def dump_slow_log(entries: List[Dict], path: str) -> bool:
+    """Write the slow-request span trees to ``path`` (JSON).
+
+    Only writes when there is something to report; returns whether a
+    file was written, so CI can upload the artifact conditionally.
+    """
+    if not entries:
+        return False
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump({"slow_requests": entries}, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    return True

@@ -18,12 +18,15 @@ pre-minted ``token=``.
 from __future__ import annotations
 
 import itertools
+import json
+import os
 import time
 from typing import Any, Dict, Optional
 
 from repro.serve.auth import AuthError, mint_token
 from repro.serve.storage_service import (OP_CLOSE, OP_DELETE, OP_OPEN,
-                                         OP_READ, OP_STAT, OP_WRITE,
+                                         OP_READ, OP_STAT, OP_STATS,
+                                         OP_WRITE,
                                          ST_ERROR, ST_OK, ST_RETRY,
                                          decode_response, encode_request)
 
@@ -79,6 +82,8 @@ class PendingReply:
         assert status == ST_OK
         if op == OP_READ:
             return fields["data"]
+        if op == OP_STATS:
+            return json.loads(fields["data"].decode("utf-8"))
         return fields
 
 
@@ -115,6 +120,11 @@ class GatewayClient:
             from repro.serve.transport import SocketChannel
             self._channel = SocketChannel(target)
         self._rid = itertools.count(1)
+        # per-request trace ids: random 48-bit base + counter, so ids
+        # from concurrent clients don't collide and are never 0
+        # (0 = untraced on the wire)
+        self._trace = itertools.count(
+            (int.from_bytes(os.urandom(6), "big") << 16) | 1)
         self.tenant = tenant
         if token is None and secret is not None:
             token = mint_token(tenant, secret, ttl_s=token_ttl_s)
@@ -132,6 +142,8 @@ class GatewayClient:
              **fields: Any) -> PendingReply:
         if session is None:
             session = self._session
+        if op in (OP_WRITE, OP_READ) and "trace" not in fields:
+            fields["trace"] = next(self._trace) & 0xFFFFFFFFFFFFFFFF
         frame = encode_request(op, session, next(self._rid), **fields)
         return PendingReply(self._channel.request(frame), op)
 
@@ -184,6 +196,14 @@ class GatewayClient:
     def stat(self, path: str) -> Dict[str, int]:
         """{'versions', 'total_len', 'blocks'} for the latest version."""
         return self._rpc(OP_STAT, path=path).result()
+
+    def stats(self) -> Dict[str, Any]:
+        """Live gateway observability snapshot (the full
+        ``snapshot_stats()`` tree: tenants, engine per-device
+        histograms, WAL fsync percentiles, trace-ring counters) fetched
+        over the wire via ``OP_STATS``.  Note JSON transit turns int
+        dict keys (e.g. device indices) into strings."""
+        return self._rpc(OP_STATS).result()
 
     def delete(self, path: str) -> int:
         """Delete every version of ``path``; returns orphaned digests."""

@@ -56,6 +56,7 @@ counters plus the engine's fused-launch counters; the
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
 import queue
 import struct
@@ -69,12 +70,13 @@ from repro.core.castore import MetadataManager, open_durable_store
 from repro.core.crystal import CrystalTPU
 from repro.core.noderuntime import ClusterRuntime, NodeRuntimeConfig
 from repro.core.sai import SAI, SAIConfig
+from repro.obs import MetricsRegistry, Trace, Tracer
 from repro.serve.auth import AuthError, TokenAuthenticator
 
 # ----------------------------------------------------------------------
 # wire-format codec: framed requests/responses (transport-independent)
 # ----------------------------------------------------------------------
-OP_OPEN, OP_WRITE, OP_READ, OP_DELETE, OP_STAT, OP_CLOSE = range(6)
+OP_OPEN, OP_WRITE, OP_READ, OP_DELETE, OP_STAT, OP_CLOSE, OP_STATS = range(7)
 ST_OK, ST_RETRY, ST_ERROR = range(3)
 
 # Default cap on a single codec frame.  The socket transport refuses to
@@ -84,12 +86,15 @@ ST_OK, ST_RETRY, ST_ERROR = range(3)
 MAX_FRAME_BYTES = 64 << 20
 
 OP_NAMES = {OP_OPEN: "open", OP_WRITE: "write", OP_READ: "read",
-            OP_DELETE: "delete", OP_STAT: "stat", OP_CLOSE: "close"}
+            OP_DELETE: "delete", OP_STAT: "stat", OP_CLOSE: "close",
+            OP_STATS: "stats"}
 
 # QoS class -> engine priority lane (repro.core.crystal.LANES order)
 QOS_LANES = {"interactive": "fg", "batch": "batch", "scrub": "scrub"}
 
-_REQ_HDR = struct.Struct("!BIQ")       # op, session, rid
+# Every request header carries a trace id (0 = untraced): clients mint
+# one per request and the gateway records per-stage spans against it.
+_REQ_HDR = struct.Struct("!BIQQ")      # op, session, rid, trace
 _RSP_HDR = struct.Struct("!BBQ")       # status, op, rid
 _U16 = struct.Struct("!H")
 _U32 = struct.Struct("!I")
@@ -158,7 +163,7 @@ def _take_bytes(buf: bytes, off: int) -> Tuple[bytes, int]:
 
 
 def encode_request(op: int, session: int, rid: int, **f: Any) -> bytes:
-    head = _REQ_HDR.pack(op, session, rid)
+    head = _REQ_HDR.pack(op, session, rid, int(f.get("trace", 0)))
     if op == OP_OPEN:
         return head + _pack_str(f["tenant"]) + _pack_str(f["qos"]) \
             + _F64.pack(float(f.get("weight", 1.0))) \
@@ -171,7 +176,7 @@ def encode_request(op: int, session: int, rid: int, **f: Any) -> bytes:
             + struct.pack("!B", 1 if f.get("verify", True) else 0)
     if op in (OP_DELETE, OP_STAT):
         return head + _pack_str(f["path"])
-    if op == OP_CLOSE:
+    if op in (OP_CLOSE, OP_STATS):
         return head
     raise CodecError(f"unknown opcode {op}")
 
@@ -188,8 +193,12 @@ def decode_request(frame: bytes,
         raise CodecError(
             f"frame of {len(frame)} bytes exceeds max_frame_bytes "
             f"({max_frame_bytes})")
-    (op, session, rid), off = _take(frame, 0, _REQ_HDR)
+    (op, session, rid, trace), off = _take(frame, 0, _REQ_HDR)
     f: Dict[str, Any] = {}
+    if trace:
+        # omitted when 0 so encode(**decode(frame)) round-trips for
+        # untraced frames
+        f["trace"] = trace
     if op == OP_OPEN:
         f["tenant"], off = _take_str(frame, off)
         f["qos"], off = _take_str(frame, off)
@@ -205,7 +214,7 @@ def decode_request(frame: bytes,
         f["verify"] = bool(v)
     elif op in (OP_DELETE, OP_STAT):
         f["path"], off = _take_str(frame, off)
-    elif op == OP_CLOSE:
+    elif op in (OP_CLOSE, OP_STATS):
         pass
     else:
         raise CodecError(f"unknown opcode {op}")
@@ -233,6 +242,9 @@ def encode_response(status: int, op: int, rid: int, **f: Any) -> bytes:
     if op == OP_STAT:
         return head + _U32.pack(f["versions"]) + _U64.pack(f["total_len"]) \
             + _U32.pack(f["blocks"])
+    if op == OP_STATS:
+        # JSON snapshot rides as an opaque length-prefixed payload
+        return head + _pack_bytes(f["data"])
     if op == OP_CLOSE:
         return head
     raise CodecError(f"unknown opcode {op}")
@@ -262,6 +274,8 @@ def decode_response(frame: bytes):
         (f["versions"],), off = _take(frame, off, _U32)
         (f["total_len"],), off = _take(frame, off, _U64)
         (f["blocks"],), off = _take(frame, off, _U32)
+    elif op == OP_STATS:
+        f["data"], off = _take_bytes(frame, off)
     elif op == OP_CLOSE:
         pass
     else:
@@ -348,6 +362,10 @@ class GatewayConfig:
     #                                   suspects to the scrub runtime
     n_nodes: int = 4                  # durable-mode store shape
     replication: int = 1
+    trace_ring: int = 256             # completed-trace ring capacity
+    slow_request_s: float = 1.0       # traces at/over this land in the
+    #                                   slow-request log with full span
+    #                                   trees
 
 
 @dataclasses.dataclass
@@ -357,10 +375,13 @@ class _Work:
     fields: Dict[str, Any]
     cost: int
     reply: ReplyFuture
+    trace: Optional[Trace] = None
+    t_admit: float = 0.0
 
 
 class _Tenant:
-    def __init__(self, name: str, weight: float, qos: str, sai: SAI):
+    def __init__(self, name: str, weight: float, qos: str, sai: SAI,
+                 registry: MetricsRegistry):
         self.name = name
         self.weight = max(float(weight), 1e-6)
         self.qos = qos
@@ -371,10 +392,11 @@ class _Tenant:
         self.deficit = 0.0
         self.completion_q: "queue.Queue" = queue.Queue()
         self.completer: Optional[threading.Thread] = None
-        self.stats: Dict[str, int] = {
-            "submitted": 0, "completed": 0, "rejected": 0, "errors": 0,
-            "bytes_in": 0, "bytes_out": 0,
-        }
+        # atomic counters (completer/scheduler/handler threads all
+        # bump); still reads like the old plain dict
+        self.stats = registry.group(
+            ("submitted", "completed", "rejected", "errors",
+             "bytes_in", "bytes_out"), prefix=f"tenant/{name}/")
 
 
 class StorageGateway:
@@ -423,8 +445,17 @@ class StorageGateway:
         self._rr = 0
         self._closed = False
         self._stop = threading.Event()
-        self.stats = {"frames": 0, "dispatched": 0,
-                      "admission_rejections": 0}
+        self.metrics = MetricsRegistry()
+        self.stats = self.metrics.group(
+            ("frames", "dispatched", "admission_rejections"))
+        self.tracer = Tracer(capacity=self.cfg.trace_ring,
+                             slow_threshold_s=self.cfg.slow_request_s)
+        # request latency (admission -> reply) per data verb, plus WDRR
+        # queue wait (admission -> dispatch)
+        self._hist_write = self.metrics.histogram("request_s/write")
+        self._hist_read = self.metrics.histogram("request_s/read")
+        self._hist_queue = self.metrics.histogram("queue_wait_s")
+        self.metrics.gauge("sessions", fn=lambda: len(self._sessions))
         self.runtime: Optional[ClusterRuntime] = None
         if self.cfg.scrub:
             self.runtime = ClusterRuntime(manager, engine=self.engine,
@@ -477,6 +508,7 @@ class StorageGateway:
         the owner that opened them — frames naming another owner's
         session are answered exactly like an unknown session, so session
         ids carry no authority across connections."""
+        t_rx = time.perf_counter()
         reply = ReplyFuture()
         try:
             op, session, rid, f = decode_request(
@@ -488,13 +520,17 @@ class StorageGateway:
             # of seeing the CodecError
             op = rid = 0
             if len(frame) >= _REQ_HDR.size:
-                op, _session, rid = _REQ_HDR.unpack_from(frame)
+                op, _session, rid, _trace = _REQ_HDR.unpack_from(frame)
             reply._resolve(encode_response(ST_ERROR, op, rid,
                                            errtype="CodecError",
                                            msg=str(e)))
             return reply
+        # (trace_id, rx timestamp, decoded timestamp): becomes the
+        # request's root Trace if it survives admission
+        trace_id = f.pop("trace", 0)
+        tctx = (trace_id, t_rx, time.perf_counter()) if trace_id else None
         try:
-            self._handle(op, session, rid, f, reply, owner)
+            self._handle(op, session, rid, f, reply, owner, tctx)
         except BaseException as e:
             reply._resolve(encode_response(ST_ERROR, op, rid,
                                            errtype=type(e).__name__,
@@ -502,9 +538,9 @@ class StorageGateway:
         return reply
 
     def _handle(self, op: int, session: int, rid: int,
-                f: Dict[str, Any], reply: ReplyFuture, owner: Any):
-        with self._cv:
-            self.stats["frames"] += 1
+                f: Dict[str, Any], reply: ReplyFuture, owner: Any,
+                tctx: Optional[Tuple[int, float, float]] = None):
+        self.stats.inc("frames")
         if op == OP_OPEN:
             return self._open_session(rid, f, reply, owner)
         with self._cv:
@@ -525,10 +561,12 @@ class StorageGateway:
             return
         if op == OP_STAT:
             return self._stat(tenant, rid, f, reply)
+        if op == OP_STATS:
+            return self._stats_op(tenant, rid, reply)
         if op == OP_DELETE:
             return self._delete(tenant, rid, f, reply)
         if op in (OP_WRITE, OP_READ):
-            return self._admit(tenant, op, rid, f, reply)
+            return self._admit(tenant, op, rid, f, reply, tctx)
         reply._resolve(encode_response(ST_ERROR, op, rid,
                                        errtype="CodecError",
                                        msg=f"unhandled opcode {op}"))
@@ -574,7 +612,8 @@ class StorageGateway:
                     self.cfg.sai or SAIConfig(), lane=QOS_LANES[qos])
                 tenant = _Tenant(f["tenant"], f["weight"], qos,
                                  SAI(self.manager, sai_cfg,
-                                     crystal=self.engine))
+                                     crystal=self.engine),
+                                 self.metrics)
                 tenant.completer = threading.Thread(
                     target=self._completer_loop, args=(tenant,),
                     daemon=True, name=f"gateway-done-{tenant.name}")
@@ -608,17 +647,27 @@ class StorageGateway:
                 ST_ERROR, OP_STAT, rid, errtype="FileNotFoundError",
                 msg=f["path"]))
             return
-        with self._cv:
-            tenant.stats["submitted"] += 1
-            tenant.stats["completed"] += 1
+        tenant.stats.inc("submitted")
+        tenant.stats.inc("completed")
         reply._resolve(encode_response(ST_OK, OP_STAT, rid, **st))
+
+    def _stats_op(self, tenant: _Tenant, rid: int, reply: ReplyFuture):
+        """OP_STATS admin verb: the live ``snapshot_stats()`` tree as a
+        JSON payload.  Session-gated like every non-OPEN op, so with
+        ``GatewayConfig(auth=...)`` set it requires an authenticated
+        session."""
+        tenant.stats.inc("submitted")
+        payload = json.dumps(self.snapshot_stats(),
+                             sort_keys=True).encode("utf-8")
+        tenant.stats.inc("completed")
+        reply._resolve(encode_response(ST_OK, OP_STATS, rid,
+                                       data=payload))
 
     def _delete(self, tenant: _Tenant, rid: int, f: Dict[str, Any],
                 reply: ReplyFuture):
         orphans = self.manager.delete_file(f["path"])
-        with self._cv:
-            tenant.stats["submitted"] += 1
-            tenant.stats["completed"] += 1
+        tenant.stats.inc("submitted")
+        tenant.stats.inc("completed")
         reply._resolve(encode_response(ST_OK, OP_DELETE, rid,
                                        orphans=len(orphans)))
 
@@ -630,7 +679,8 @@ class StorageGateway:
         return max(st["total_len"], 1) if st else 1
 
     def _admit(self, tenant: _Tenant, op: int, rid: int,
-               f: Dict[str, Any], reply: ReplyFuture):
+               f: Dict[str, Any], reply: ReplyFuture,
+               tctx: Optional[Tuple[int, float, float]] = None):
         cost = self._cost_of(op, f)
         cfg = self.cfg
         with self._cv:
@@ -645,17 +695,27 @@ class StorageGateway:
             over_bytes = tenant.queue and \
                 tenant.queued_bytes + cost > cfg.max_queued_bytes
             if outstanding >= cfg.max_outstanding or over_bytes:
-                tenant.stats["rejected"] += 1
-                self.stats["admission_rejections"] += 1
+                tenant.stats.inc("rejected")
+                self.stats.inc("admission_rejections")
                 reply._resolve(encode_response(
                     ST_RETRY, op, rid,
                     reason=f"tenant {tenant.name} over budget "
                            f"({outstanding} outstanding, "
                            f"{tenant.queued_bytes} B queued)"))
                 return
-            tenant.queue.append(_Work(op, rid, f, cost, reply))
+            trace = None
+            if tctx is not None:
+                # root spans from frame arrival so every child span
+                # nests inside [trace.t0, trace.t1]
+                trace = self.tracer.start(tctx[0], OP_NAMES[op],
+                                          t0=tctx[1],
+                                          tenant=tenant.name)
+                trace.add_span("transport/decode", tctx[1], tctx[2])
+            tenant.queue.append(_Work(op, rid, f, cost, reply,
+                                      trace=trace,
+                                      t_admit=time.perf_counter()))
             tenant.queued_bytes += cost
-            tenant.stats["submitted"] += 1
+            tenant.stats.inc("submitted")
             self._cv.notify_all()
 
     # -- fair-share scheduler (weighted deficit round-robin) -----------
@@ -694,7 +754,7 @@ class StorageGateway:
                 t.deficit = 0.0
         if n:
             self._rr = (self._rr + 1) % n
-        self.stats["dispatched"] += len(picks)
+        self.stats.inc("dispatched", len(picks))
         return picks
 
     def _scheduler_loop(self):
@@ -710,14 +770,21 @@ class StorageGateway:
                 self._dispatch(tenant, work)
 
     def _dispatch(self, tenant: _Tenant, work: _Work):
+        now = time.perf_counter()
+        self._hist_queue.record(now - work.t_admit)
+        if work.trace is not None:
+            work.trace.add_span("gateway/queue", work.t_admit, now,
+                                tenant=tenant.name)
         try:
             if work.op == OP_WRITE:
                 fut = tenant.sai.write_async(work.fields["path"],
-                                             work.fields["data"])
+                                             work.fields["data"],
+                                             trace=work.trace)
             else:
                 fut = tenant.sai.read_async(work.fields["path"],
                                             work.fields["version"],
-                                            work.fields["verify"])
+                                            work.fields["verify"],
+                                            trace=work.trace)
         except BaseException as e:
             self._finish(tenant, work, encode_response(
                 ST_ERROR, work.op, work.rid, errtype=type(e).__name__,
@@ -759,12 +826,18 @@ class StorageGateway:
 
     def _finish(self, tenant: _Tenant, work: _Work, frame: bytes,
                 error: bool = False, **nbytes: int):
+        now = time.perf_counter()
+        hist = self._hist_write if work.op == OP_WRITE else self._hist_read
+        hist.record(now - work.t_admit)
+        if work.trace is not None:
+            work.trace.meta["error"] = bool(error)
+            self.tracer.finish(work.trace, now)
         work.reply._resolve(frame)
+        tenant.stats.inc("errors" if error else "completed")
+        for k, v in nbytes.items():
+            tenant.stats.inc(k, v)
         with self._cv:
             tenant.inflight -= 1
-            tenant.stats["errors" if error else "completed"] += 1
-            for k, v in nbytes.items():
-                tenant.stats[k] += v
             self._cv.notify_all()
 
     # -- observability -------------------------------------------------
@@ -798,6 +871,23 @@ class StorageGateway:
                                    for lane in crystal_mod.LANES}
         if self.runtime is not None:
             out["runtime"] = self.runtime.snapshot_stats()
+        out["obs"] = {
+            "request": {"write": self._hist_write.summary(),
+                        "read": self._hist_read.summary(),
+                        "queue_wait": self._hist_queue.summary()},
+            "traces": self.tracer.stats(),
+        }
+        wal = getattr(self.manager, "wal", None)
+        if wal is not None:
+            out["wal"] = wal.snapshot_stats()
+        stores = [n.store for n in getattr(self.manager, "nodes", [])
+                  if getattr(n, "store", None) is not None]
+        if stores:
+            agg: Dict[str, int] = {}
+            for st in stores:
+                for k, v in st.stats.items():
+                    agg[k] = agg.get(k, 0) + v
+            out["blockstore"] = agg
         return out
 
     # -- lifecycle -----------------------------------------------------
@@ -824,7 +914,7 @@ class StorageGateway:
                     while t.queue:
                         w = t.queue.popleft()
                         t.queued_bytes -= w.cost
-                        t.stats["rejected"] += 1
+                        t.stats.inc("rejected")
                         w.reply._resolve(encode_response(
                             ST_RETRY, w.op, w.rid,
                             reason="gateway closing"))

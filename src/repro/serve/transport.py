@@ -46,6 +46,7 @@ import struct
 import threading
 from typing import Dict, Optional, Tuple, Union
 
+from repro.obs import MetricsRegistry
 from repro.serve.storage_service import (MAX_FRAME_BYTES, ST_ERROR,
                                          ReplyFuture, StorageGateway,
                                          _REQ_HDR, _RSP_HDR,
@@ -187,7 +188,7 @@ class SocketChannel:
 
     # -- transport contract --------------------------------------------
     def request(self, frame: bytes) -> ReplyFuture:
-        op, _session, rid = _REQ_HDR.unpack_from(frame)
+        op, _session, rid, _trace = _REQ_HDR.unpack_from(frame)
         reply = ReplyFuture()
         with self._lock:
             if self._closing or self._dead:
@@ -298,8 +299,7 @@ class _Connection:
                 frame = recv_frame(self.sock, srv.max_frame_bytes)
                 if frame is None:      # half-close: no more requests,
                     break              # writer still drains responses
-                with srv._lock:
-                    srv.stats["frames"] += 1
+                srv.stats.inc("frames")
                 # owner=self: sessions opened on this connection are
                 # usable only from this connection — another client
                 # naming the same session id gets UnknownSession
@@ -310,15 +310,13 @@ class _Connection:
             # stop reading and tell the writer to drain in-flight
             # replies without touching the untrusted stream
             self.aborted = True
-            with srv._lock:
-                srv.stats["frame_errors"] += 1
+            srv.stats.inc("frame_errors")
         except OSError:
             # routine abrupt disconnect (RST, crashed client) — not a
             # protocol violation; counted separately so frame_errors
             # stays a clean hostile-peer signal
             self.aborted = True
-            with srv._lock:
-                srv.stats["disconnects"] += 1
+            srv.stats.inc("disconnects")
         finally:
             self.writeq.put(None)
 
@@ -431,8 +429,11 @@ class GatewayServer:
         self._lock = threading.Lock()
         self._conns: set = set()
         self._closed = False
-        self.stats = {"connections": 0, "frames": 0, "frame_errors": 0,
-                      "disconnects": 0}
+        # atomic counters: connection reader threads bump these without
+        # taking the server lock
+        self.metrics = MetricsRegistry()
+        self.stats = self.metrics.group(
+            ("connections", "frames", "frame_errors", "disconnects"))
         # resolve the bind family from the host (AF_INET6 for IPv6
         # literals/names) instead of hard-coding AF_INET; "" means
         # wildcard, which getaddrinfo only understands as None
@@ -482,7 +483,7 @@ class GatewayServer:
                     except OSError:
                         pass
                     continue
-                self.stats["connections"] += 1
+                self.stats.inc("connections")
                 self._conns.add(_Connection(self, sock, peer))
 
     def _forget(self, conn: _Connection):

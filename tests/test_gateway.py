@@ -47,6 +47,9 @@ def test_wire_codec_roundtrip_requests():
         (svc.OP_DELETE, 7, 4, dict(path="/a")),
         (svc.OP_STAT, 7, 5, dict(path="/a")),
         (svc.OP_CLOSE, 7, 6, {}),
+        (svc.OP_STATS, 7, 7, {}),
+        (svc.OP_WRITE, 7, 8,
+         dict(trace=0xABCDEF0123456789, path="/traced", data=b"td")),
     ]
     for op, sess, rid, fields in cases:
         frame = svc.encode_request(op, sess, rid, **fields)
@@ -73,6 +76,7 @@ def test_wire_codec_roundtrip_responses():
         (svc.ST_RETRY, svc.OP_WRITE, 7, dict(reason="over budget")),
         (svc.ST_ERROR, svc.OP_READ, 8,
          dict(errtype="IOError", msg="bad block")),
+        (svc.ST_OK, svc.OP_STATS, 9, dict(data=b'{"obs": {}}')),
     ]
     for status, op, rid, fields in cases:
         frame = svc.encode_response(status, op, rid, **fields)
@@ -378,6 +382,9 @@ def test_codec_fuzz_truncations_and_trailing_bytes():
         svc.encode_request(svc.OP_DELETE, 3, 4, path="/p"),
         svc.encode_request(svc.OP_STAT, 3, 5, path="/p"),
         svc.encode_request(svc.OP_CLOSE, 3, 6),
+        svc.encode_request(svc.OP_STATS, 3, 7),
+        svc.encode_request(svc.OP_WRITE, 3, 8, path="/p", data=b"y" * 50,
+                           trace=0xDEADBEEF12345678),
     ]
     rsp_frames = [
         svc.encode_response(svc.ST_OK, svc.OP_OPEN, 1, session=4),
@@ -391,6 +398,8 @@ def test_codec_fuzz_truncations_and_trailing_bytes():
         svc.encode_response(svc.ST_RETRY, svc.OP_WRITE, 7, reason="r"),
         svc.encode_response(svc.ST_ERROR, svc.OP_READ, 8,
                             errtype="IOError", msg="m"),
+        svc.encode_response(svc.ST_OK, svc.OP_STATS, 9,
+                            data=b'{"frames": 3}'),
     ]
     for frames, decode in ((req_frames, svc.decode_request),
                            (rsp_frames, svc.decode_response)):
@@ -407,7 +416,7 @@ def test_codec_fuzz_truncations_and_trailing_bytes():
     # invalid utf-8 in a wire string field (CodecError, never
     # UnicodeDecodeError)
     with pytest.raises(svc.CodecError):
-        svc.decode_request(svc._REQ_HDR.pack(svc.OP_STAT, 1, 1)
+        svc.decode_request(svc._REQ_HDR.pack(svc.OP_STAT, 1, 1, 0)
                            + b"\x00\x02\xff\xfe")
     with pytest.raises(svc.CodecError):
         svc.decode_response(svc._RSP_HDR.pack(svc.ST_RETRY, svc.OP_WRITE,
@@ -418,6 +427,33 @@ def test_codec_fuzz_truncations_and_trailing_bytes():
             svc.decode_request(bytes([250]) + frame[1:])
     with pytest.raises(svc.CodecError):
         svc.decode_response(svc._RSP_HDR.pack(svc.ST_OK, 250, 1))
+
+
+def test_stats_op_requires_session_and_returns_snapshot(rng):
+    """OP_STATS is session-gated like every non-OPEN verb: a frame
+    without a valid session bounces with UnknownSession, while a
+    session-holding client gets the live JSON snapshot."""
+    mgr, _ = make_store(4)
+    eng = CrystalTPU()
+    gw = _gateway(mgr, eng)
+    try:
+        frame = svc.encode_request(svc.OP_STATS, 999, 1)
+        status, op, _rid, fields = svc.decode_response(
+            gw.handle_frame(frame).result(30))
+        assert (status, op) == (svc.ST_ERROR, svc.OP_STATS)
+        assert fields["errtype"] == "UnknownSession"
+
+        client = GatewayClient(gw, "solo")
+        data = rng.integers(0, 256, 2 * 4096, dtype=np.uint8).tobytes()
+        client.write("/s/f", data)
+        snap = client.stats()
+        assert isinstance(snap, dict)
+        assert snap["obs"]["request"]["write"]["count"] >= 1
+        assert "per_device" in snap["engine"]
+        client.close()
+    finally:
+        gw.close()
+        eng.shutdown()
 
 
 def test_codec_oversized_payload_raises_codec_error():
