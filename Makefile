@@ -1,6 +1,6 @@
 PYTHON ?= python
 
-.PHONY: test test-fast test-crash dev-deps bench bench-smoke bench-mesh-smoke
+.PHONY: test test-fast test-crash dev-deps bench bench-smoke bench-mesh-smoke bench-compare
 
 dev-deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -34,8 +34,19 @@ bench-smoke:
 	@cat bench-smoke.csv
 	@grep -q '^gateway/latency_p99' bench-smoke.csv
 	@grep -q '^recovery/fsync_p95' bench-smoke.csv
+	@grep -q '^health/status' bench-smoke.csv
+	@grep -q '^health/sampler' bench-smoke.csv
+	@grep -q '^health/scrape' bench-smoke.csv
+	@test -s obs-health.json
 	@$(PYTHON) -c "import json; s = json.load(open('BENCH_smoke.json')); \
 		assert s.get('obs'), 'missing obs block in BENCH_smoke.json'"
+
+# perf-regression gate: fresh smoke JSON vs the committed baseline
+# (generous cross-machine tolerance bands; ok-flag counters exact —
+# see benchmarks/compare.py for the row policy and env overrides)
+bench-compare:
+	PYTHONPATH=src:. $(PYTHON) benchmarks/compare.py \
+		BENCH_baseline.json BENCH_smoke.json
 
 # engine-mesh ablation alone (1 vs 4 forced host devices, static vs
 # adaptive fusion); asserts the mesh rows actually landed in the CSV

@@ -1,0 +1,111 @@
+"""Perf-regression gate: fresh BENCH_smoke.json vs committed baseline.
+
+``make bench-compare`` (and the CI step behind it) runs::
+
+    python benchmarks/compare.py BENCH_baseline.json BENCH_smoke.json
+
+Row policy (the per-row tolerance bands):
+
+* every baseline row must exist in the fresh run (a silently vanished
+  benchmark is itself a regression);
+* latency-like rows (``/latency_p*``, ``/fsync_p*``, ``health/`` tick
+  timings excluded) are **higher-is-worse**: the fresh ``us_per_call``
+  must stay under ``baseline * (1 + tol) + floor_us``.  The band is
+  deliberately generous (defaults: tol x6 + 25 ms floor, overridable
+  via ``BENCH_COMPARE_TOL`` / ``BENCH_COMPARE_FLOOR_US``) because the
+  committed baseline and the CI runner are different machines — the
+  gate exists to catch order-of-magnitude regressions, not scheduler
+  jitter;
+* correctness counters (``counters`` keys ending in ``.ok``) must match
+  **exactly** — an ok-flag is a boolean claim, not a measurement.
+
+Exit status 1 prints every offending row; 0 prints the pass summary.
+To refresh the baseline intentionally, run ``make bench-smoke`` and
+copy ``BENCH_smoke.json`` over ``BENCH_baseline.json`` in the same PR
+that changes the performance.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+from typing import Dict, List, Tuple
+
+LATENCY_ROW = re.compile(r"/latency_p\d+|/fsync_p\d+")
+
+DEFAULT_TOL = 6.0          # fresh may be up to (1 + tol) x baseline
+DEFAULT_FLOOR_US = 25000.0  # plus this absolute slack (cross-machine)
+
+
+def _rows(summary: Dict) -> Dict[str, float]:
+    return {r["name"]: float(r["us_per_call"])
+            for r in summary.get("rows", [])}
+
+
+def compare(baseline: Dict, fresh: Dict,
+            tol: float = DEFAULT_TOL,
+            floor_us: float = DEFAULT_FLOOR_US) -> Tuple[bool, List[str]]:
+    """-> (ok, problems).  Pure so tests can feed synthetic JSON."""
+    problems: List[str] = []
+    base_rows, fresh_rows = _rows(baseline), _rows(fresh)
+
+    for name, base_us in sorted(base_rows.items()):
+        if name not in fresh_rows:
+            problems.append(f"MISSING ROW   {name} (baseline "
+                            f"{base_us:.1f} us, absent from fresh run)")
+            continue
+        if not LATENCY_ROW.search(name):
+            continue
+        limit = base_us * (1.0 + tol) + floor_us
+        got = fresh_rows[name]
+        if got > limit:
+            problems.append(
+                f"LATENCY REGR  {name}: {got:.1f} us > limit "
+                f"{limit:.1f} us (baseline {base_us:.1f} us, "
+                f"tol x{1.0 + tol:g} + {floor_us:.0f} us floor)")
+
+    base_ctr = baseline.get("counters", {})
+    fresh_ctr = fresh.get("counters", {})
+    for key, want in sorted(base_ctr.items()):
+        if not key.endswith(".ok"):
+            continue
+        got = fresh_ctr.get(key)
+        if got is None:
+            problems.append(f"MISSING CTR   {key} (baseline {want})")
+        elif float(got) != float(want):
+            problems.append(f"COUNTER DIFF  {key}: {got} != "
+                            f"baseline {want}")
+    return not problems, problems
+
+
+def main(argv: List[str]) -> int:
+    if len(argv) != 3:
+        print(f"usage: {argv[0]} BASELINE.json FRESH.json",
+              file=sys.stderr)
+        return 2
+    with open(argv[1], "r", encoding="utf-8") as fh:
+        baseline = json.load(fh)
+    with open(argv[2], "r", encoding="utf-8") as fh:
+        fresh = json.load(fh)
+    tol = float(os.environ.get("BENCH_COMPARE_TOL", DEFAULT_TOL))
+    floor_us = float(os.environ.get("BENCH_COMPARE_FLOOR_US",
+                                    DEFAULT_FLOOR_US))
+    ok, problems = compare(baseline, fresh, tol=tol, floor_us=floor_us)
+    if not ok:
+        print(f"bench-compare: {len(problems)} regression(s) vs "
+              f"{argv[1]}:")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    n_lat = sum(1 for n in _rows(baseline) if LATENCY_ROW.search(n))
+    n_ok = sum(1 for k in baseline.get("counters", {})
+               if k.endswith(".ok"))
+    print(f"bench-compare: OK ({len(_rows(baseline))} baseline rows "
+          f"present, {n_lat} latency rows within x{1.0 + tol:g}"
+          f"+{floor_us:.0f}us band, {n_ok} ok-flags exact)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

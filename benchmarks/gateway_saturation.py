@@ -24,6 +24,8 @@ to servable system).
 """
 from __future__ import annotations
 
+import http.client
+import json
 import threading
 import time
 
@@ -131,16 +133,85 @@ def run() -> list:
             rows.append((f"gateway/fairness/{n_clients}c", fair * 1e6,
                          f"min_over_max={fair:.2f}"))
     rows.extend(_socket_mode(rng, SOCKET_CLIENTS, slow_entries))
+    rows.extend(_health_mode(rng))
     # requests that crossed the gateway's slow threshold, as a span-tree
     # dump CI uploads when non-empty
     if dump_slow_log(slow_entries, "obs-slowlog.json"):
         rows.append(("gateway/slow_requests", float(len(slow_entries)),
                      f"dumped={len(slow_entries)}"))
-    # the smoke CI contract: per-tenant + socket + percentile rows MUST
-    # be present
+    # the smoke CI contract: per-tenant + socket + percentile + health
+    # rows MUST be present
     assert any(name.startswith("gateway/tenant_") for name, _, _ in rows)
     assert any(name.startswith("gateway/socket_") for name, _, _ in rows)
     assert any(name.startswith("gateway/latency_p99") for name, _, _ in rows)
+    assert any(name.startswith("health/") for name, _, _ in rows)
+    return rows
+
+
+def _http_get(port: int, path: str):
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=10)
+    try:
+        conn.request("GET", path)
+        resp = conn.getresponse()
+        return resp.status, resp.read()
+    finally:
+        conn.close()
+
+
+def _health_mode(rng) -> list:
+    """Continuous-health-plane section: the same write burst with the
+    MetricsSampler + HealthEngine + HTTP scrape endpoint live.  Emits
+    ``health/`` rows (status, sampler ring size, windowed write rate,
+    scrape sizes) and dumps ``obs-health.json`` (final verdicts + the
+    sampler ring tail) for the CI artifact."""
+    rows: list = []
+    mgr, _ = make_store(4)
+    engine = CrystalTPU(coalesce_window_s=0.02)
+    gw = StorageGateway(mgr, engine=engine, config=GatewayConfig(
+        sai=SAIConfig(ca="fixed", hasher="tpu",
+                      block_size=BLOCK_KB << 10),
+        health=True, metrics_port=0, sample_interval_s=0.05,
+        sample_window_s=2.0))
+    client = GatewayClient(gw, "hmon")
+    datas = [rng.integers(0, 256, FILE_KB << 10,
+                          dtype=np.uint8).tobytes()
+             for _ in range(FILES_PER_CLIENT)]
+    t0 = time.perf_counter()
+    for i, d in enumerate(datas):
+        client.write_retrying(f"/hmon/{i}", d)
+    elapsed = time.perf_counter() - t0
+    # let the sampler take a couple of post-burst ticks so windowed
+    # rates and verdicts cover the traffic
+    time.sleep(0.2)
+    report = client.health()
+    ts = gw.snapshot_stats().get("timeseries", {})
+    code_h, body_h = _http_get(gw.http.port, "/health")
+    code_m, body_m = _http_get(gw.http.port, "/metrics")
+    tail = gw.sampler.tail(32, prefixes=[
+        "heartbeats/", "wal/heartbeats/", "engine/per_device/",
+        "queue_depths/", "obs/request/", "frames", "dispatched"])
+    gw.close()
+    engine.shutdown()
+    assert code_h == 200, (code_h, body_h)
+    assert report["status"] in ("ok", "warn"), report
+    assert b"# TYPE" in body_m and b"repro_" in body_m
+
+    with open("obs-health.json", "w", encoding="utf-8") as fh:
+        json.dump({"report": report, "ring_tail": tail}, fh,
+                  indent=1, sort_keys=True)
+        fh.write("\n")
+
+    healthy = int(report["status"] == "ok")
+    rows.append(("health/status",
+                 elapsed / max(FILES_PER_CLIENT, 1) * 1e6,
+                 f"ok={healthy}_verdicts={len(report['verdicts'])}_"
+                 f"evals={report['evals']}"))
+    rows.append(("health/sampler", float(report["samples"]),
+                 f"samples={report['samples']}_"
+                 f"writes_per_s={ts.get('writes_per_s', 0.0):.2f}"))
+    rows.append(("health/scrape", float(len(body_m)),
+                 f"metrics_bytes={len(body_m)}_health_bytes="
+                 f"{len(body_h)}_http_code={code_h}"))
     return rows
 
 

@@ -110,6 +110,7 @@ import jax
 import numpy as np
 
 from repro.kernels import ops
+from repro.obs import HeartbeatBoard
 from repro.obs import metrics as metrics_mod
 
 
@@ -562,6 +563,9 @@ class CrystalTPU:
             _DeviceState(i, d,
                          self.metrics.histogram(f"device{i}/launch_s"))
             for i, d in enumerate(self.devices)]
+        # per-manager liveness: beats per loop iteration, parks while
+        # blocked on an empty lane queue (idle mesh reads healthy)
+        self.heartbeats = HeartbeatBoard()
         self._managers = [
             threading.Thread(target=self._manager_main, args=(s,),
                              daemon=True, name=f"crystal-mgr-{s.index}")
@@ -795,6 +799,7 @@ class CrystalTPU:
                                  for s in self._dev_states}
             out["policy"] = self.policy.snapshot()
             out["cost_model"] = self.cost.snapshot()
+        out["heartbeats"] = self.heartbeats.snapshot()
         return out
 
     def queue_depth(self, lane: Optional[str] = None,
@@ -922,14 +927,19 @@ class CrystalTPU:
         # terminates only on its shutdown token, never on the _alive
         # flag: a carried (popped-but-unfused) job must still execute
         # even if shutdown() lands while the previous batch runs
+        hb = self.heartbeats.heartbeat(f"manager{dev.index}")
         carry: Optional[Job] = None
         while True:
+            hb.beat()
             if carry is not None:
                 job, carry = carry, None
             else:
+                hb.park()       # indefinite block on an empty lane queue
                 job = dev.queue.get()
                 if job is None:
+                    hb.park()   # clean shutdown: stay dormant
                     return
+                hb.beat()
                 self._note_picked(dev, job)
             batch, carry = self._drain_batch(dev, job)
             if self._fault_hook is not None:

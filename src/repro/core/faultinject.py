@@ -19,6 +19,11 @@ blockstore / castore):
   ``wal.fsync``       a group-commit flush cycle about to fsync —
                       ``"skip"`` models a lying disk (records reported
                       durable, bytes lost with the process)
+  ``wal.flusher``     one group-commit flusher loop iteration, fired
+                      *outside* the WAL lock — a ``"stall"`` arm here
+                      wedges only the flusher thread (writers keep
+                      committing via ``sync()`` leader election), the
+                      scenario heartbeat watchdogs must catch
   ``wal.snapshot``    a snapshot about to be written (crash =>
                       recovery falls back to the previous snapshot and
                       a longer tail)
@@ -75,6 +80,10 @@ class FaultInjector:
         the guarded operation (fsync dropped)
       * ``"torn"``  — ``fire`` returns ``"torn"``; the caller persists
         a deliberately partial record, then raises CrashPoint itself
+      * ``"stall"`` — ``fire`` blocks the *calling thread* (outside the
+        injector lock) until :meth:`clear_stall` releases the site or
+        ``stall_max_s`` elapses — models a wedged-but-alive thread so
+        health watchdogs can be proven to fire
       * a callable — invoked with the fire context; its return value is
         handed back to the caller (may itself raise)
 
@@ -84,9 +93,11 @@ class FaultInjector:
     ``times`` repeats the trigger for that many matching hits after the
     threshold (default 1)."""
 
-    def __init__(self):
+    def __init__(self, stall_max_s: float = 60.0):
         self._lock = threading.Lock()
         self._arms: Dict[str, List[tuple]] = {}
+        self._stalls: Dict[str, threading.Event] = {}
+        self.stall_max_s = stall_max_s
         self.hits: Dict[str, int] = {}
         self.log: List[tuple] = []
 
@@ -103,6 +114,38 @@ class FaultInjector:
         """Crash on the n-th matching hit of ``site`` (the ISSUE's
         ``kill_after(n_wal_records)`` spelled per-site)."""
         return self.arm(site, after=n, action="crash", when=when)
+
+    def stall(self, site: str, after: int = 1,
+              when: Optional[Dict[str, Any]] = None):
+        """Wedge every later ``fire(site)`` caller until
+        :meth:`clear_stall`.  The blocked thread stays alive (unlike a
+        crash), which is exactly the failure mode heartbeat watchdogs
+        exist to catch."""
+        with self._lock:
+            self._stalls.setdefault(site, threading.Event()).clear()
+        return self.arm(site, after=after, action="stall",
+                        times=1 << 30, when=when)
+
+    def clear_stall(self, site: Optional[str] = None):
+        """Release stalled callers (one site, or all when ``site`` is
+        None) and disarm the matching stall arms so later fires pass."""
+        with self._lock:
+            sites = [site] if site is not None else list(self._stalls)
+            for s in sites:
+                ev = self._stalls.get(s)
+                if ev is not None:
+                    ev.set()
+                self._arms[s] = [
+                    entry for entry in self._arms.get(s, [])
+                    if entry[0].action != "stall"
+                ]
+        return self
+
+    def _stall_wait(self, site: str) -> str:
+        with self._lock:
+            ev = self._stalls.setdefault(site, threading.Event())
+        ev.wait(timeout=self.stall_max_s)
+        return "stall"
 
     def fire(self, site: str, **ctx) -> Optional[Any]:
         """Called by instrumented code at a fault site.  Returns the
@@ -123,7 +166,9 @@ class FaultInjector:
                 hit = count[0]
                 if arm.action == "crash":
                     raise CrashPoint(site, hit)
-                if callable(arm.action):
+                if arm.action == "stall":
+                    triggered = lambda: self._stall_wait(site)           # noqa: E731,B023
+                elif callable(arm.action):
                     act = arm.action
                     triggered = lambda: act(site=site, hit=hit, **ctx)  # noqa: E731,B023
                 else:
@@ -137,6 +182,9 @@ class FaultInjector:
             self._arms.clear()
             self.hits.clear()
             self.log.clear()
+            for ev in self._stalls.values():
+                ev.set()  # release any thread still wedged in a stall
+            self._stalls.clear()
 
 
 def tear_tail(path: str, keep_frac: float = 0.5, min_cut: int = 1):

@@ -55,7 +55,7 @@ from typing import Dict, List, Optional
 
 from repro.core import integrity
 from repro.core.castore import MetadataManager, NodeFailure, StorageNode
-from repro.obs import MetricsRegistry
+from repro.obs import HeartbeatBoard, MetricsRegistry
 from repro.core.crystal import CrystalTPU
 from repro.core import crystal as crystal_mod
 from repro.core.sai import pack_blocks
@@ -98,21 +98,21 @@ class NodeRuntime:
         self.node = node
         self.cluster = cluster
 
-    def scrub_once(self, paced: bool = False) -> Dict[str, int]:
+    def scrub_once(self, paced: bool = False, hb=None) -> Dict[str, int]:
         """One full sweep of this node.  Returns {scanned, corrupt}."""
         node = self.node
         digests = [] if node.failed else node.healthy_digests()
-        return self.scrub_digests(digests, paced=paced)
+        return self.scrub_digests(digests, paced=paced, hb=hb)
 
     def scrub_digests(self, digests: List[bytes],
-                      paced: bool = False) -> Dict[str, int]:
+                      paced: bool = False, hb=None) -> Dict[str, int]:
         """Engine-verify a specific digest list on this node (the full
         sweep and the recovery suspect-scrub share this path).  Returns
         {scanned, corrupt}."""
         cl, node, cfg = self.cluster, self.node, self.cluster.cfg
         scanned = corrupt = 0
         for k in range(0, len(digests), cfg.scrub_batch_blocks):
-            if not cl._gate():
+            if not cl._gate(hb):
                 break
             if not cl._load_gate():
                 break                      # foreground busy: yield the
@@ -172,6 +172,9 @@ class ClusterRuntime:
         self._resume.set()
         self._threads: List[threading.Thread] = []
         self._stats_lock = threading.Lock()   # guards _gc_pending
+        # per-loop liveness: beats between scrub bursts / maintenance
+        # cycles, parks while paused (so pause() reads healthy-idle)
+        self.heartbeats = HeartbeatBoard()
         self.metrics = MetricsRegistry()
         self.stats = self.metrics.group(
             ("scrubbed_blocks", "corrupt_found", "repairs_enqueued",
@@ -193,11 +196,17 @@ class ClusterRuntime:
         for k, v in deltas.items():
             self.stats.inc(k, v)
 
-    def _gate(self) -> bool:
-        """Respect pause/stop between scrub bursts.  True = proceed."""
+    def _gate(self, hb=None) -> bool:
+        """Respect pause/stop between scrub bursts.  True = proceed.
+        ``hb`` (a heartbeat) parks while paused so a deliberately
+        suspended runtime never reads as a stalled thread."""
         while not self._stop.is_set():
             if self._resume.wait(timeout=0.05):
+                if hb is not None:
+                    hb.beat()
                 return True
+            if hb is not None:
+                hb.park()
         return False
 
     def _foreground_depth(self) -> int:
@@ -481,25 +490,38 @@ class ClusterRuntime:
             es = self._engine.snapshot_stats()
             for k in ("scrub_jobs", "scrub_launches", "scrub_coalesced"):
                 out[k] = es[k]
+        out["heartbeats"] = self.heartbeats.snapshot()
         return out
 
     # ------------------------------------------------------------------
     # background loops
     # ------------------------------------------------------------------
     def _scrub_loop(self, nr: NodeRuntime):
-        while not self._stop.is_set():
-            if not self._gate():
-                return
-            try:
-                nr.scrub_once(paced=True)
-            except Exception:
-                pass                      # keep the scrubber thread up
-            self._stop.wait(self.cfg.scrub_cycle_idle_s)
+        hb = self.heartbeats.heartbeat(f"scrub{nr.node.node_id}")
+        try:
+            while not self._stop.is_set():
+                if not self._gate(hb):
+                    return
+                try:
+                    nr.scrub_once(paced=True, hb=hb)
+                except Exception:
+                    pass                  # keep the scrubber thread up
+                hb.beat()
+                self._stop.wait(self.cfg.scrub_cycle_idle_s)
+        finally:
+            hb.park()                     # clean exit is dormancy
 
     def _maintenance_loop(self):
+        hb = self.heartbeats.heartbeat("maint")
         cfg, cycle = self.cfg, 0
+        try:
+            self._maintenance_cycles(hb, cfg, cycle)
+        finally:
+            hb.park()
+
+    def _maintenance_cycles(self, hb, cfg, cycle):
         while not self._stop.is_set():
-            if not self._gate():
+            if not self._gate(hb):
                 return
             try:
                 cycle += 1
@@ -514,4 +536,5 @@ class ClusterRuntime:
                     self.merkle_check_once()
             except Exception:
                 pass                      # keep the maintenance loop up
+            hb.beat()
             self._stop.wait(cfg.repair_poll_s)

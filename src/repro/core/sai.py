@@ -73,7 +73,7 @@ from repro.core import crystal as crystal_mod
 from repro.core import integrity
 from repro.core.castore import BlockMeta, MetadataManager, NodeFailure
 from repro.core.crystal import CrystalTPU
-from repro.obs import MetricsRegistry, Trace
+from repro.obs import HeartbeatBoard, MetricsRegistry, Trace
 
 
 @dataclass
@@ -267,6 +267,9 @@ class SAI:
         # close(), so closed SAIs don't leak into a long-lived
         # manager's listener list.
         self._cache_listener_on = False
+        # pipeline-stage liveness: each stage thread beats per item and
+        # parks across its blocking queue get (idle pipeline = healthy)
+        self.heartbeats = HeartbeatBoard()
         self._pipe_lock = threading.Lock()
         self._chunk_q: Optional[queue.Queue] = None
         self._store_qs: Optional[List[queue.Queue]] = None
@@ -588,7 +591,7 @@ class SAI:
                                     args=(self._chunk_q, self._store_qs),
                                     daemon=True, name="sai-chunk")]
         threads += [
-            threading.Thread(target=self._store_loop, args=(q,),
+            threading.Thread(target=self._store_loop, args=(q, i),
                              daemon=True, name=f"sai-store-{i}")
             for i, q in enumerate(self._store_qs)]
         self._pipe_threads.extend(threads)
@@ -596,13 +599,16 @@ class SAI:
             t.start()
 
     def _chunk_loop(self, chunk_q, store_qs):
+        hb = self.heartbeats.heartbeat("chunk")
         while True:
+            hb.park()                    # indefinite block while idle
             item = chunk_q.get()
             if item is None:                         # close() sentinel
                 for q in store_qs:
                     q.put(None)
                 chunk_q.task_done()
-                return
+                return                   # heartbeat stays parked
+            hb.beat()
             fut, path, data, trace = item
             # per-path lane: commits for one path stay FIFO while
             # different paths commit on parallel lanes
@@ -626,12 +632,15 @@ class SAI:
             finally:
                 chunk_q.task_done()
 
-    def _store_loop(self, store_q):
+    def _store_loop(self, store_q, lane: int = 0):
+        hb = self.heartbeats.heartbeat(f"store{lane}")
         while True:
+            hb.park()
             item = store_q.get()
             if item is None:                         # close() sentinel
                 store_q.task_done()
                 return
+            hb.beat()
             fut, path, data, chunks, handle, times, trace = item
             try:
                 if handle is None:                   # ca='none'
@@ -948,12 +957,15 @@ class SAI:
             t.start()
 
     def _fetch_loop(self, fetch_q, verify_q):
+        hb = self.heartbeats.heartbeat("fetch")
         while True:
+            hb.park()
             item = fetch_q.get()
             if item is None:                         # close() sentinel
                 verify_q.put(None)
                 fetch_q.task_done()
                 return
+            hb.beat()
             fut, path, version, verify, trace = item
             try:
                 t0 = time.perf_counter()
@@ -977,11 +989,14 @@ class SAI:
                 fetch_q.task_done()
 
     def _verify_loop(self, verify_q):
+        hb = self.heartbeats.heartbeat("verify")
         while True:
+            hb.park()
             item = verify_q.get()
             if item is None:                         # close() sentinel
                 verify_q.task_done()
                 return
+            hb.beat()
             fut, fv, datas, srcs, handles, idxs, locmap, trace = item
             try:
                 if handles is not None:

@@ -49,7 +49,7 @@ import time
 import zlib
 from typing import Any, Callable, Iterator, List, Optional, Tuple
 
-from repro.obs import MetricsRegistry
+from repro.obs import HeartbeatBoard, MetricsRegistry
 
 from .faultinject import CrashPoint, FaultInjector
 
@@ -163,11 +163,16 @@ class WriteAheadLog:
         self._recover_dir()
 
         self._stop = threading.Event()
+        self.heartbeats = HeartbeatBoard()
         self._flusher: Optional[threading.Thread] = None
         if self.flush_interval_s > 0:
             self._flusher = threading.Thread(
                 target=self._flush_loop, name="wal-flusher", daemon=True)
             self._flusher.start()
+        else:
+            # inline-fsync mode has no flusher thread: register the
+            # heartbeat parked so watchdogs read "idle", not "stalled"
+            self.heartbeats.heartbeat("flusher").park()
 
     # ------------------------------------------------------------ recovery
 
@@ -304,6 +309,7 @@ class WriteAheadLog:
         (count/sum/max/p50/p95/p99 in seconds)."""
         out = dict(self.stats)
         out["fsync_hist"] = self._fsync_hist.summary()
+        out["heartbeats"] = self.heartbeats.snapshot()
         return out
 
     # ------------------------------------------------------------ flushing
@@ -341,23 +347,44 @@ class WriteAheadLog:
         self._cv.notify_all()
 
     def _flush_loop(self):
-        while not self._stop.is_set():
-            with self._cv:
-                while (not self._buf
-                       and self._flushed_seq == self._pending_seq
-                       and not self._stop.is_set() and not self._crashed):
-                    self._cv.wait(timeout=0.1)
-                if self._stop.is_set() or self._crashed:
-                    return
-            # batch window: let concurrent writers pile into the buffer
-            self._stop.wait(self.flush_interval_s)
-            with self._lock:
-                if self._crashed:
-                    return
-                try:
-                    self._flush_locked()
-                except CrashPoint:
-                    return
+        hb = self.heartbeats.heartbeat("flusher")
+        try:
+            while not self._stop.is_set():
+                hb.beat()
+                if self.fault is not None:
+                    # fired OUTSIDE the WAL lock: a "stall" arm wedges
+                    # only this thread — writers keep committing via
+                    # sync() leader election while the heartbeat ages
+                    try:
+                        self.fault.fire("wal.flusher")
+                    except CrashPoint:
+                        return
+                with self._cv:
+                    if (not self._buf
+                            and self._flushed_seq == self._pending_seq
+                            and not self._crashed):
+                        self._cv.wait(timeout=0.1)
+                    if self._stop.is_set() or self._crashed:
+                        return
+                    idle = (not self._buf
+                            and self._flushed_seq == self._pending_seq)
+                if idle:
+                    # idle ticks cycle back through the beat + fault
+                    # fire above, so a stall arm wedges an idle flusher
+                    # too (the watchdog drill) and the heartbeat stays
+                    # fresh without holding the condvar
+                    continue
+                # batch window: let concurrent writers pile into the buffer
+                self._stop.wait(self.flush_interval_s)
+                with self._lock:
+                    if self._crashed:
+                        return
+                    try:
+                        self._flush_locked()
+                    except CrashPoint:
+                        return
+        finally:
+            hb.park()   # clean exit/crash is dormancy, not a stall
 
     # ------------------------------------------------------------ snapshot
 

@@ -1,14 +1,25 @@
-"""Unified observability plane: metrics, traces, exporters.
+"""Unified observability plane: metrics, traces, exporters, health.
 
 ``obs`` is dependency-free (stdlib only) so every layer — engine, SAI,
 WAL, block store, node runtime, gateway, transport — can import it
-without cycles.  See docs/OBSERVABILITY.md for the metric-name table
-and trace span hierarchy.
+without cycles.  See docs/OBSERVABILITY.md for the metric-name table,
+trace span hierarchy, and health verdict rules.
 """
 
 from .metrics import Counter, CounterGroup, Gauge, Histogram, MetricsRegistry
 from .trace import Span, Trace, Tracer
-from .export import dump_slow_log, flatten, prometheus_text
+from .export import dump_slow_log, flatten, prometheus_text, truncate_tree
+from .health import (
+    Heartbeat,
+    HeartbeatBoard,
+    HealthConfig,
+    HealthEngine,
+    STATUS_CRITICAL,
+    STATUS_OK,
+    STATUS_WARN,
+)
+from .timeseries import MetricsSampler
+from .httpexport import HealthHTTPServer
 
 __all__ = [
     "Counter",
@@ -22,4 +33,14 @@ __all__ = [
     "dump_slow_log",
     "flatten",
     "prometheus_text",
+    "truncate_tree",
+    "Heartbeat",
+    "HeartbeatBoard",
+    "HealthConfig",
+    "HealthEngine",
+    "HealthHTTPServer",
+    "MetricsSampler",
+    "STATUS_CRITICAL",
+    "STATUS_OK",
+    "STATUS_WARN",
 ]

@@ -24,9 +24,9 @@ import time
 from typing import Any, Dict, Optional
 
 from repro.serve.auth import AuthError, mint_token
-from repro.serve.storage_service import (OP_CLOSE, OP_DELETE, OP_OPEN,
-                                         OP_READ, OP_STAT, OP_STATS,
-                                         OP_WRITE,
+from repro.serve.storage_service import (OP_CLOSE, OP_DELETE, OP_HEALTH,
+                                         OP_OPEN, OP_READ, OP_STAT,
+                                         OP_STATS, OP_WRITE,
                                          ST_ERROR, ST_OK, ST_RETRY,
                                          decode_response, encode_request)
 
@@ -82,7 +82,7 @@ class PendingReply:
         assert status == ST_OK
         if op == OP_READ:
             return fields["data"]
-        if op == OP_STATS:
+        if op in (OP_STATS, OP_HEALTH):
             return json.loads(fields["data"].decode("utf-8"))
         return fields
 
@@ -204,6 +204,12 @@ class GatewayClient:
         over the wire via ``OP_STATS``.  Note JSON transit turns int
         dict keys (e.g. device indices) into strings."""
         return self._rpc(OP_STATS).result()
+
+    def health(self) -> Dict[str, Any]:
+        """The gateway's health report via ``OP_HEALTH``: overall
+        ``status`` (``ok``/``warn``/``critical``) plus the rule
+        verdicts — the same JSON the ``/health`` HTTP route serves."""
+        return self._rpc(OP_HEALTH).result()
 
     def delete(self, path: str) -> int:
         """Delete every version of ``path``; returns orphaned digests."""

@@ -70,13 +70,16 @@ from repro.core.castore import MetadataManager, open_durable_store
 from repro.core.crystal import CrystalTPU
 from repro.core.noderuntime import ClusterRuntime, NodeRuntimeConfig
 from repro.core.sai import SAI, SAIConfig
-from repro.obs import MetricsRegistry, Trace, Tracer
+from repro.obs import (HealthConfig, HealthEngine, HealthHTTPServer,
+                       HeartbeatBoard, MetricsRegistry, MetricsSampler,
+                       Trace, Tracer, truncate_tree)
 from repro.serve.auth import AuthError, TokenAuthenticator
 
 # ----------------------------------------------------------------------
 # wire-format codec: framed requests/responses (transport-independent)
 # ----------------------------------------------------------------------
-OP_OPEN, OP_WRITE, OP_READ, OP_DELETE, OP_STAT, OP_CLOSE, OP_STATS = range(7)
+(OP_OPEN, OP_WRITE, OP_READ, OP_DELETE, OP_STAT, OP_CLOSE, OP_STATS,
+ OP_HEALTH) = range(8)
 ST_OK, ST_RETRY, ST_ERROR = range(3)
 
 # Default cap on a single codec frame.  The socket transport refuses to
@@ -87,7 +90,7 @@ MAX_FRAME_BYTES = 64 << 20
 
 OP_NAMES = {OP_OPEN: "open", OP_WRITE: "write", OP_READ: "read",
             OP_DELETE: "delete", OP_STAT: "stat", OP_CLOSE: "close",
-            OP_STATS: "stats"}
+            OP_STATS: "stats", OP_HEALTH: "health"}
 
 # QoS class -> engine priority lane (repro.core.crystal.LANES order)
 QOS_LANES = {"interactive": "fg", "batch": "batch", "scrub": "scrub"}
@@ -176,7 +179,7 @@ def encode_request(op: int, session: int, rid: int, **f: Any) -> bytes:
             + struct.pack("!B", 1 if f.get("verify", True) else 0)
     if op in (OP_DELETE, OP_STAT):
         return head + _pack_str(f["path"])
-    if op in (OP_CLOSE, OP_STATS):
+    if op in (OP_CLOSE, OP_STATS, OP_HEALTH):
         return head
     raise CodecError(f"unknown opcode {op}")
 
@@ -214,7 +217,7 @@ def decode_request(frame: bytes,
         f["verify"] = bool(v)
     elif op in (OP_DELETE, OP_STAT):
         f["path"], off = _take_str(frame, off)
-    elif op in (OP_CLOSE, OP_STATS):
+    elif op in (OP_CLOSE, OP_STATS, OP_HEALTH):
         pass
     else:
         raise CodecError(f"unknown opcode {op}")
@@ -242,8 +245,8 @@ def encode_response(status: int, op: int, rid: int, **f: Any) -> bytes:
     if op == OP_STAT:
         return head + _U32.pack(f["versions"]) + _U64.pack(f["total_len"]) \
             + _U32.pack(f["blocks"])
-    if op == OP_STATS:
-        # JSON snapshot rides as an opaque length-prefixed payload
+    if op in (OP_STATS, OP_HEALTH):
+        # JSON snapshot/report rides as an opaque length-prefixed payload
         return head + _pack_bytes(f["data"])
     if op == OP_CLOSE:
         return head
@@ -274,7 +277,7 @@ def decode_response(frame: bytes):
         (f["versions"],), off = _take(frame, off, _U32)
         (f["total_len"],), off = _take(frame, off, _U64)
         (f["blocks"],), off = _take(frame, off, _U32)
-    elif op == OP_STATS:
+    elif op in (OP_STATS, OP_HEALTH):
         f["data"], off = _take_bytes(frame, off)
     elif op == OP_CLOSE:
         pass
@@ -366,6 +369,20 @@ class GatewayConfig:
     slow_request_s: float = 1.0       # traces at/over this land in the
     #                                   slow-request log with full span
     #                                   trees
+    health: bool = False              # run the continuous health plane
+    #                                   (background MetricsSampler +
+    #                                   HealthEngine re-evaluated every
+    #                                   tick); OP_HEALTH works without it
+    #                                   by sampling on demand
+    metrics_port: Optional[int] = None  # HTTP scrape endpoint serving
+    #                                   /metrics, /health, /slowlog on
+    #                                   127.0.0.1 (0 = ephemeral port,
+    #                                   exposed as gateway.http.port);
+    #                                   setting it implies health=True
+    sample_interval_s: float = 0.25   # sampler tick
+    sample_capacity: int = 240        # sampler ring entries
+    sample_window_s: float = 5.0      # rate/delta lookback window
+    health_config: Optional[HealthConfig] = None  # verdict rule knobs
 
 
 @dataclasses.dataclass
@@ -447,7 +464,8 @@ class StorageGateway:
         self._stop = threading.Event()
         self.metrics = MetricsRegistry()
         self.stats = self.metrics.group(
-            ("frames", "dispatched", "admission_rejections"))
+            ("frames", "dispatched", "admission_rejections",
+             "stats_truncated"))
         self.tracer = Tracer(capacity=self.cfg.trace_ring,
                              slow_threshold_s=self.cfg.slow_request_s)
         # request latency (admission -> reply) per data verb, plus WDRR
@@ -455,7 +473,12 @@ class StorageGateway:
         self._hist_write = self.metrics.histogram("request_s/write")
         self._hist_read = self.metrics.histogram("request_s/read")
         self._hist_queue = self.metrics.histogram("queue_wait_s")
+        # per-QoS-class latency (raw buckets ride the snapshot so the
+        # health plane can compute windowed SLO violation rates)
+        self._hist_qos = {q: self.metrics.histogram(f"qos_s/{q}")
+                          for q in QOS_LANES}
         self.metrics.gauge("sessions", fn=lambda: len(self._sessions))
+        self.heartbeats = HeartbeatBoard()
         self.runtime: Optional[ClusterRuntime] = None
         if self.cfg.scrub:
             self.runtime = ClusterRuntime(manager, engine=self.engine,
@@ -471,6 +494,27 @@ class StorageGateway:
                                            daemon=True,
                                            name="gateway-sched")
         self._scheduler.start()
+        # continuous health plane: the sampler snapshots the BASE tree
+        # (no timeseries/health blocks — those derive from the ring, so
+        # sampling the full tree would be self-referential), the health
+        # engine re-evaluates after every tick, and the optional HTTP
+        # endpoint serves scrapes without a wire session
+        self.sampler = MetricsSampler(
+            self._base_stats, interval_s=self.cfg.sample_interval_s,
+            capacity=self.cfg.sample_capacity,
+            window_s=self.cfg.sample_window_s)
+        self.health = HealthEngine(self.sampler,
+                                   self.cfg.health_config)
+        self.http: Optional[HealthHTTPServer] = None
+        if self.cfg.health or self.cfg.metrics_port is not None:
+            self.sampler.add_listener(self.health.evaluate)
+            self.sampler.start()
+        if self.cfg.metrics_port is not None:
+            self.http = HealthHTTPServer(
+                stats_fn=self.snapshot_stats,
+                health_fn=self.health_report,
+                slowlog_fn=self.tracer.slow_entries,
+                port=self.cfg.metrics_port)
 
     # -- plumbing ------------------------------------------------------
     @property
@@ -563,6 +607,8 @@ class StorageGateway:
             return self._stat(tenant, rid, f, reply)
         if op == OP_STATS:
             return self._stats_op(tenant, rid, reply)
+        if op == OP_HEALTH:
+            return self._health_op(tenant, rid, reply)
         if op == OP_DELETE:
             return self._delete(tenant, rid, f, reply)
         if op in (OP_WRITE, OP_READ):
@@ -651,16 +697,39 @@ class StorageGateway:
         tenant.stats.inc("completed")
         reply._resolve(encode_response(ST_OK, OP_STAT, rid, **st))
 
+    def _bounded_json(self, tree: Dict[str, Any]) -> bytes:
+        """Serialize a stats/health tree, truncating it (deepest
+        subtrees first) when the JSON would overflow the response frame
+        cap — an overgrown tree must degrade, not kill the connection
+        with an undecodable oversized frame."""
+        payload = json.dumps(tree, sort_keys=True).encode("utf-8")
+        # headroom for the response header + payload length prefix
+        budget = max(1024, self.cfg.max_frame_bytes - 256)
+        if len(payload) > budget:
+            tree, _dropped = truncate_tree(tree, budget)
+            self.stats.inc("stats_truncated")
+            payload = json.dumps(tree, sort_keys=True).encode("utf-8")
+        return payload
+
     def _stats_op(self, tenant: _Tenant, rid: int, reply: ReplyFuture):
         """OP_STATS admin verb: the live ``snapshot_stats()`` tree as a
         JSON payload.  Session-gated like every non-OPEN op, so with
         ``GatewayConfig(auth=...)`` set it requires an authenticated
         session."""
         tenant.stats.inc("submitted")
-        payload = json.dumps(self.snapshot_stats(),
-                             sort_keys=True).encode("utf-8")
+        payload = self._bounded_json(self.snapshot_stats())
         tenant.stats.inc("completed")
         reply._resolve(encode_response(ST_OK, OP_STATS, rid,
+                                       data=payload))
+
+    def _health_op(self, tenant: _Tenant, rid: int, reply: ReplyFuture):
+        """OP_HEALTH admin verb: the health report as a JSON payload
+        (same shape the ``/health`` HTTP route serves), session-gated
+        like OP_STATS."""
+        tenant.stats.inc("submitted")
+        payload = self._bounded_json(self.health_report())
+        tenant.stats.inc("completed")
+        reply._resolve(encode_response(ST_OK, OP_HEALTH, rid,
                                        data=payload))
 
     def _delete(self, tenant: _Tenant, rid: int, f: Dict[str, Any],
@@ -758,16 +827,23 @@ class StorageGateway:
         return picks
 
     def _scheduler_loop(self):
-        while True:
-            with self._cv:
-                while not self._stop.is_set() \
-                        and not self._eligible_locked():
-                    self._cv.wait(self.cfg.idle_poll_s)
-                if self._stop.is_set() and not self._eligible_locked():
-                    return
-                picks = self._pick_locked()
-            for tenant, work in picks:
-                self._dispatch(tenant, work)
+        hb = self.heartbeats.heartbeat("scheduler")
+        try:
+            while True:
+                hb.beat()
+                with self._cv:
+                    while not self._stop.is_set() \
+                            and not self._eligible_locked():
+                        hb.beat()   # idle polls are forward progress
+                        self._cv.wait(self.cfg.idle_poll_s)
+                    if self._stop.is_set() \
+                            and not self._eligible_locked():
+                        return
+                    picks = self._pick_locked()
+                for tenant, work in picks:
+                    self._dispatch(tenant, work)
+        finally:
+            hb.park()
 
     def _dispatch(self, tenant: _Tenant, work: _Work):
         now = time.perf_counter()
@@ -798,10 +874,13 @@ class StorageGateway:
         frames the responses.  Per-tenant (not gateway-wide) so one
         tenant's slow read never head-of-line blocks another tenant's
         finished requests."""
+        hb = self.heartbeats.heartbeat(f"completer_{tenant.name}")
         while True:
+            hb.park()                # idle until the next completion
             item = tenant.completion_q.get()
             if item is None:
-                return
+                return               # heartbeat stays parked
+            hb.beat()
             work, fut = item
             nbytes = {}
             try:
@@ -829,6 +908,7 @@ class StorageGateway:
         now = time.perf_counter()
         hist = self._hist_write if work.op == OP_WRITE else self._hist_read
         hist.record(now - work.t_admit)
+        self._hist_qos[tenant.qos].record(now - work.t_admit)
         if work.trace is not None:
             work.trace.meta["error"] = bool(error)
             self.tracer.finish(work.trace, now)
@@ -841,17 +921,20 @@ class StorageGateway:
             self._cv.notify_all()
 
     # -- observability -------------------------------------------------
-    def snapshot_stats(self) -> Dict[str, Any]:
-        """Per-tenant throughput/queue/rejection counters, the engine's
-        launch/coalesce counters (``launches < jobs`` across a
-        concurrent burst is the cross-client coalescing signature), and
-        the owned runtime's counters when scrubbing is on."""
+    def _base_stats(self) -> Dict[str, Any]:
+        """The point-in-time stats tree (what the MetricsSampler
+        snapshots): per-tenant throughput/queue/rejection counters, the
+        engine's launch/coalesce counters (``launches < jobs`` across a
+        concurrent burst is the cross-client coalescing signature), the
+        owned runtime's counters when scrubbing is on, and every
+        layer's thread heartbeats."""
         with self._cv:
             tenants = {
                 t.name: {**t.stats, "queue_depth": len(t.queue),
                          "queued_bytes": t.queued_bytes,
                          "inflight": t.inflight, "weight": t.weight,
-                         "qos": t.qos}
+                         "qos": t.qos,
+                         "heartbeats": t.sai.heartbeats.snapshot()}
                 for t in self._order}
             out: Dict[str, Any] = {
                 "tenants": tenants,
@@ -860,7 +943,9 @@ class StorageGateway:
                 "dispatched": self.stats["dispatched"],
                 "admission_rejections":
                     self.stats["admission_rejections"],
+                "stats_truncated": self.stats["stats_truncated"],
             }
+        out["heartbeats"] = self.heartbeats.snapshot()
         eng = self._engine
         if eng is not None and eng._alive:
             es = eng.snapshot_stats()
@@ -875,6 +960,8 @@ class StorageGateway:
             "request": {"write": self._hist_write.summary(),
                         "read": self._hist_read.summary(),
                         "queue_wait": self._hist_queue.summary()},
+            "qos": {q: {**h.summary(), "buckets": list(h.buckets())}
+                    for q, h in self._hist_qos.items()},
             "traces": self.tracer.stats(),
         }
         wal = getattr(self.manager, "wal", None)
@@ -889,6 +976,26 @@ class StorageGateway:
                     agg[k] = agg.get(k, 0) + v
             out["blockstore"] = agg
         return out
+
+    def snapshot_stats(self) -> Dict[str, Any]:
+        """The base tree plus the health plane's derived blocks: a
+        ``timeseries`` block of windowed rates and a ``health`` block
+        with the latest rule verdicts (present once the sampler has at
+        least one sample)."""
+        out = self._base_stats()
+        if self.sampler.samples:
+            out["timeseries"] = self.sampler.snapshot()
+            out["health"] = self.health.snapshot()
+        return out
+
+    def health_report(self) -> Dict[str, Any]:
+        """Fresh health verdicts.  With the background plane running
+        this evaluates against the live ring; without it, each call
+        takes one sample first, so repeated OP_HEALTH polls still
+        accumulate a window."""
+        if not self.sampler.running:
+            self.sampler.sample_once()
+        return self.health.evaluate()
 
     # -- lifecycle -----------------------------------------------------
     def close(self, timeout: float = 60.0):
@@ -924,6 +1031,10 @@ class StorageGateway:
         self._scheduler.join(timeout=10)
         if already:
             return
+        # tear the health plane down before the layers it samples
+        if self.http is not None:
+            self.http.close()
+        self.sampler.stop()
         for t in self._order:
             t.completion_q.put(None)
         for t in self._order:

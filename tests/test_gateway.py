@@ -48,6 +48,7 @@ def test_wire_codec_roundtrip_requests():
         (svc.OP_STAT, 7, 5, dict(path="/a")),
         (svc.OP_CLOSE, 7, 6, {}),
         (svc.OP_STATS, 7, 7, {}),
+        (svc.OP_HEALTH, 7, 9, {}),
         (svc.OP_WRITE, 7, 8,
          dict(trace=0xABCDEF0123456789, path="/traced", data=b"td")),
     ]
@@ -77,6 +78,8 @@ def test_wire_codec_roundtrip_responses():
         (svc.ST_ERROR, svc.OP_READ, 8,
          dict(errtype="IOError", msg="bad block")),
         (svc.ST_OK, svc.OP_STATS, 9, dict(data=b'{"obs": {}}')),
+        (svc.ST_OK, svc.OP_HEALTH, 10,
+         dict(data=b'{"status": "ok", "verdicts": []}')),
     ]
     for status, op, rid, fields in cases:
         frame = svc.encode_response(status, op, rid, **fields)
@@ -383,6 +386,7 @@ def test_codec_fuzz_truncations_and_trailing_bytes():
         svc.encode_request(svc.OP_STAT, 3, 5, path="/p"),
         svc.encode_request(svc.OP_CLOSE, 3, 6),
         svc.encode_request(svc.OP_STATS, 3, 7),
+        svc.encode_request(svc.OP_HEALTH, 3, 9),
         svc.encode_request(svc.OP_WRITE, 3, 8, path="/p", data=b"y" * 50,
                            trace=0xDEADBEEF12345678),
     ]
@@ -400,6 +404,8 @@ def test_codec_fuzz_truncations_and_trailing_bytes():
                             errtype="IOError", msg="m"),
         svc.encode_response(svc.ST_OK, svc.OP_STATS, 9,
                             data=b'{"frames": 3}'),
+        svc.encode_response(svc.ST_OK, svc.OP_HEALTH, 10,
+                            data=b'{"status": "ok"}'),
     ]
     for frames, decode in ((req_frames, svc.decode_request),
                            (rsp_frames, svc.decode_response)):
@@ -450,6 +456,36 @@ def test_stats_op_requires_session_and_returns_snapshot(rng):
         assert isinstance(snap, dict)
         assert snap["obs"]["request"]["write"]["count"] >= 1
         assert "per_device" in snap["engine"]
+        client.close()
+    finally:
+        gw.close()
+        eng.shutdown()
+
+
+def test_health_op_requires_session_and_returns_report(rng):
+    """OP_HEALTH is session-gated exactly like OP_STATS, and a
+    session-holding client gets the verdict report (the background
+    health plane is OFF here — the on-demand path samples lazily)."""
+    mgr, _ = make_store(4)
+    eng = CrystalTPU()
+    gw = _gateway(mgr, eng)
+    try:
+        frame = svc.encode_request(svc.OP_HEALTH, 999, 1)
+        status, op, _rid, fields = svc.decode_response(
+            gw.handle_frame(frame).result(30))
+        assert (status, op) == (svc.ST_ERROR, svc.OP_HEALTH)
+        assert fields["errtype"] == "UnknownSession"
+
+        client = GatewayClient(gw, "solo")
+        data = rng.integers(0, 256, 2 * 4096, dtype=np.uint8).tobytes()
+        client.write("/h/f", data)
+        report = client.health()
+        assert report["status"] in ("ok", "warn", "critical")
+        assert isinstance(report["verdicts"], list)
+        # repeated polls accumulate on-demand samples
+        again = client.health()
+        assert again["samples"] >= report["samples"]
+        assert again["evals"] > report["evals"]
         client.close()
     finally:
         gw.close()

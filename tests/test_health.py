@@ -1,0 +1,695 @@
+"""Continuous health plane (ISSUE 9): rolling time-series, heartbeat
+watchdogs, rule verdicts, the HTTP scrape endpoint, bounded stats
+replies, and the perf-regression gate.
+
+The acceptance drills at the bottom are the point of the PR: an
+injected WAL-flusher stall must flip ``/health`` to 503 with a
+``wal_flusher_stalled`` verdict within two sampling intervals (while
+writes keep committing via sync leader-election), an injected
+per-device latency skew must yield ``device_straggler`` naming the slow
+device, clearing the faults must return 200, and a cleanly
+paused/drained runtime must stay healthy (parked heartbeats are
+dormancy, not stalls).
+"""
+import http.client
+import json
+import math
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from benchmarks.compare import compare
+from repro.core import SAI, CrystalTPU, SAIConfig, make_store
+from repro.core.faultinject import FaultInjector
+from repro.core.noderuntime import ClusterRuntime
+from repro.obs import (HealthConfig, HealthEngine, HealthHTTPServer,
+                       Heartbeat, HeartbeatBoard, MetricsSampler,
+                       flatten, prometheus_text, truncate_tree)
+from repro.serve import storage_service as svc
+from repro.serve.storage_client import GatewayClient
+from repro.serve.storage_service import GatewayConfig, StorageGateway
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(29)
+
+
+def _sai_cfg(**kw):
+    cfg = dict(ca="fixed", hasher="tpu", block_size=16 << 10)
+    cfg.update(kw)
+    return SAIConfig(**cfg)
+
+
+def _gateway(mgr, engine, **kw):
+    cfg = dict(sai=_sai_cfg())
+    cfg.update(kw)
+    return StorageGateway(mgr, engine=engine, config=GatewayConfig(**cfg))
+
+
+def _http_get(port, path):
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=10)
+    try:
+        conn.request("GET", path)
+        resp = conn.getresponse()
+        return resp.status, resp.read()
+    finally:
+        conn.close()
+
+
+def _poll(predicate, timeout_s=10.0, interval_s=0.05):
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        got = predicate()
+        if got:
+            return got
+        time.sleep(interval_s)
+    return None
+
+
+# ----------------------------------------------------------------------
+# heartbeats
+# ----------------------------------------------------------------------
+def test_heartbeat_starts_parked_and_tracks_age():
+    hb = Heartbeat("worker")
+    st = hb.state()
+    assert st["parked"] == 1 and st["beats"] == 0
+    hb.beat()
+    st = hb.state()
+    assert st["parked"] == 0 and st["beats"] == 1
+    assert st["age_s"] < 1.0
+    hb.park()
+    assert hb.state()["parked"] == 1
+    hb.beat()                       # un-parks again
+    assert hb.state()["parked"] == 0
+
+
+def test_heartbeat_board_get_or_create_and_snapshot():
+    board = HeartbeatBoard()
+    a = board.heartbeat("a")
+    assert board.heartbeat("a") is a
+    board.heartbeat("b").beat()
+    snap = board.snapshot()
+    assert set(snap) == {"a", "b"}
+    assert snap["a"]["parked"] == 1
+    assert snap["b"]["parked"] == 0
+    # JSON-safe (rides snapshot_stats / the wire)
+    json.dumps(snap)
+
+
+# ----------------------------------------------------------------------
+# sampler
+# ----------------------------------------------------------------------
+def test_sampler_deltas_rates_and_series():
+    tree = {"obs": {"request": {"write": {"count": 0}}},
+            "engine": {"bytes": 0}}
+    s = MetricsSampler(lambda: tree, interval_s=0.01, window_s=60.0)
+    s.sample_once()
+    time.sleep(0.05)
+    tree["obs"]["request"]["write"]["count"] = 10
+    tree["engine"]["bytes"] = 1 << 20
+    s.sample_once()
+    assert s.delta("obs/request/write/count") == 10
+    assert s.rate("obs/request/write/count") > 0
+    assert s.rate("missing/key") is None
+    pts = s.series("engine/bytes")
+    assert [v for _, v in pts] == [0, 1 << 20]
+    snap = s.snapshot()
+    assert snap["samples"] == 2
+    assert snap["writes_per_s"] > 0
+    assert snap["hashed_bytes_per_s"] > 0
+
+
+def test_sampler_ring_is_bounded_and_window_clips():
+    tree = {"n": 0}
+    s = MetricsSampler(lambda: tree, interval_s=0.01, capacity=4,
+                       window_s=0.02)
+    for i in range(10):
+        tree["n"] = i
+        s.sample_once()
+    assert len(s.samples) == 4
+    assert s.latest_flat() == {"n": 9}
+    # window clips to entries near the latest sample: all 4 ring entries
+    # landed within microseconds, so the delta spans only the kept ring
+    assert s.delta("n") == 9 - 6
+    tail = s.tail(2)
+    assert len(tail) == 2 and tail[-1]["metrics"] == {"n": 9}
+
+
+def test_sampler_snapshot_fn_errors_counted_not_raised():
+    calls = {"n": 0}
+
+    def boom():
+        calls["n"] += 1
+        raise RuntimeError("stats tree exploded")
+
+    s = MetricsSampler(boom, interval_s=0.01)
+    assert s.sample_once() is None
+    assert s.errors == 1 and calls["n"] == 1 and not s.samples
+
+
+def test_sampler_listeners_fire_per_tick():
+    hits = []
+    s = MetricsSampler(lambda: {"x": 1}, interval_s=0.01)
+    s.add_listener(lambda: hits.append(1))
+    s.sample_once()
+    s.sample_once()
+    assert len(hits) == 2
+
+
+def test_sampler_tail_prefix_filter():
+    s = MetricsSampler(lambda: {"a": {"x": 1}, "b": {"y": 2}},
+                       interval_s=0.01)
+    s.sample_once()
+    tail = s.tail(4, prefixes=["a/"])
+    assert tail[0]["metrics"] == {"a/x": 1}
+
+
+# ----------------------------------------------------------------------
+# health rules (synthetic trees drive a real sampler)
+# ----------------------------------------------------------------------
+def _engine_for(tree):
+    s = MetricsSampler(lambda: tree, interval_s=0.01, window_s=60.0)
+    return s, HealthEngine(s, HealthConfig(stall_after_s=0.5))
+
+
+def test_watchdog_fires_on_unparked_stale_heartbeat():
+    tree = {"wal": {"heartbeats": {"flusher":
+            {"age_s": 3.0, "parked": 0, "beats": 5}}}}
+    s, eng = _engine_for(tree)
+    s.sample_once()
+    rep = eng.evaluate()
+    assert rep["status"] == "critical" and not rep["healthy"]
+    names = [v["name"] for v in rep["verdicts"]]
+    assert names == ["wal_flusher_stalled"]
+
+
+def test_watchdog_skips_parked_and_fresh_heartbeats():
+    tree = {"wal": {"heartbeats": {
+                "flusher": {"age_s": 99.0, "parked": 1, "beats": 5}}},
+            "heartbeats": {
+                "scheduler": {"age_s": 0.01, "parked": 0, "beats": 9}}}
+    s, eng = _engine_for(tree)
+    s.sample_once()
+    rep = eng.evaluate()
+    assert rep["status"] == "ok" and rep["verdicts"] == []
+
+
+def test_watchdog_verdict_names_nested_components():
+    tree = {"tenants": {"t0": {"heartbeats": {
+        "store0": {"age_s": 7.0, "parked": 0, "beats": 1}}}},
+        "heartbeats": {
+            "completer x": {"age_s": 7.0, "parked": 0, "beats": 1}}}
+    s, eng = _engine_for(tree)
+    s.sample_once()
+    names = sorted(v["name"] for v in eng.evaluate()["verdicts"])
+    assert names == ["gateway_completer_x_stalled", "t0_store0_stalled"]
+
+
+def test_straggler_names_slow_device_and_needs_active_peers():
+    def tree_at(launches):
+        return {"engine": {"per_device": {
+            0: {"slowdown": 9.0, "launches": launches[0]},
+            1: {"slowdown": 1.0, "launches": launches[1]},
+            2: {"slowdown": 1.1, "launches": launches[2]},
+        }}}
+
+    tree = tree_at([0, 0, 0])
+    s, eng = _engine_for(tree)
+    s.sample_once()
+    tree.update(tree_at([5, 5, 5]))
+    s.sample_once()
+    rep = eng.evaluate()
+    v = [v for v in rep["verdicts"] if v["rule"] == "straggler"]
+    assert len(v) == 1 and v[0]["name"] == "device_straggler"
+    assert v[0]["device"] == 0 and rep["status"] == "critical"
+
+    # same slowdowns, but only device 0 active: no peers to compare
+    # against, so the rule stays silent (single-lane traffic is not a
+    # mesh-relative judgement)
+    tree2 = tree_at([0, 0, 0])
+    s2, eng2 = _engine_for(tree2)
+    s2.sample_once()
+    tree2.update(tree_at([5, 0, 0]))
+    s2.sample_once()
+    assert eng2.evaluate()["verdicts"] == []
+
+
+def test_straggler_silent_on_drained_mesh():
+    tree = {"engine": {"per_device": {
+        0: {"slowdown": 9.0, "launches": 100},
+        1: {"slowdown": 1.0, "launches": 100}}}}
+    s, eng = _engine_for(tree)
+    s.sample_once()
+    s.sample_once()                 # no launch delta across the window
+    assert eng.evaluate()["verdicts"] == []
+
+
+def test_backlog_growth_warns_on_growing_lane():
+    tree = {"queue_depths": {"fg": 2, "batch": 2}}
+    s, eng = _engine_for(tree)
+    s.sample_once()
+    tree["queue_depths"]["fg"] = 80
+    s.sample_once()
+    rep = eng.evaluate()
+    assert rep["status"] == "warn"
+    v = rep["verdicts"][0]
+    assert v["name"] == "backlog_growth" and v["lane"] == "fg"
+
+
+def test_backlog_static_depth_is_not_growth():
+    tree = {"queue_depths": {"fg": 80}}
+    s, eng = _engine_for(tree)
+    s.sample_once()
+    s.sample_once()
+    assert eng.evaluate()["verdicts"] == []
+
+
+def test_slo_burn_fires_on_windowed_violations():
+    slo_s = 0.5
+    bad_idx = (int(slo_s * 1e9) - 1).bit_length() + 1   # >= SLO bucket
+    ok_idx = max(1, bad_idx - 6)
+
+    def tree_at(ok, bad):
+        return {"obs": {"qos": {"interactive": {
+            "buckets": {ok_idx: ok, bad_idx: bad}}}}}
+
+    tree = tree_at(0, 0)
+    s = MetricsSampler(lambda: tree, interval_s=0.01, window_s=60.0)
+    eng = HealthEngine(s, HealthConfig(
+        slo_p99_s={"interactive": slo_s}, slo_budget=0.01,
+        burn_warn=1.0, burn_critical=10.0, slo_min_count=8))
+    s.sample_once()
+    tree.update(tree_at(20, 0))
+    s.sample_once()
+    assert eng.evaluate()["verdicts"] == []     # all inside the SLO
+    tree.update(tree_at(30, 10))                # 10/20 windowed violate
+    s.sample_once()
+    rep = eng.evaluate()
+    v = rep["verdicts"][0]
+    assert v["name"] == "slo_burn_interactive"
+    assert v["status"] == "critical" and v["value"] >= 10.0
+
+
+def test_health_report_shape_and_status_ranking():
+    tree = {"wal": {"heartbeats": {"flusher":
+            {"age_s": 3.0, "parked": 0, "beats": 1}}},
+            "queue_depths": {"fg": 2}}
+    s, eng = _engine_for(tree)
+    s.sample_once()
+    tree["queue_depths"]["fg"] = 90
+    s.sample_once()
+    rep = eng.evaluate()
+    # critical outranks warn; verdicts sort critical-first
+    assert rep["status"] == "critical"
+    assert [v["status"] for v in rep["verdicts"]] == ["critical", "warn"]
+    json.dumps(rep)
+    assert eng.snapshot() == rep    # snapshot returns the last report
+
+
+# ----------------------------------------------------------------------
+# exporter satellites: non-finite floats, # TYPE lines, truncation
+# ----------------------------------------------------------------------
+def test_prometheus_text_nonfinite_and_type_lines():
+    tree = {"a": {"inf": math.inf, "ninf": -math.inf, "nan": math.nan},
+            "engine": {"launches": 3}}
+    text = prometheus_text(tree, namespace="repro")
+    lines = text.splitlines()
+    by_name = {ln.split()[0]: ln for ln in lines if not ln.startswith("#")}
+    assert by_name["repro_a_inf"].split()[1] == "+Inf"
+    assert by_name["repro_a_ninf"].split()[1] == "-Inf"
+    assert by_name["repro_a_nan"].split()[1] == "NaN"
+    # every sample line is preceded by its # TYPE metadata line
+    for name, ln in by_name.items():
+        idx = lines.index(ln)
+        assert lines[idx - 1] == f"# TYPE {name} " + (
+            "counter" if name == "repro_engine_launches" else "gauge")
+
+
+def test_truncate_tree_prunes_deepest_first_and_converges():
+    tree = {"shallow": 1,
+            "tenants": {f"t{i}": {"deep": {"x": i, "y": "z" * 50}}
+                        for i in range(40)}}
+    full = len(json.dumps(tree))
+    pruned, dropped = truncate_tree(tree, full // 8)
+    assert dropped > 0
+    assert len(json.dumps(pruned)) <= full // 8
+    assert pruned["shallow"] == 1               # shallow keys survive
+    assert pruned["stats_truncated"] == dropped
+    # original tree untouched (deep copy)
+    assert tree["tenants"]["t0"]["deep"]["x"] == 0
+    # tiny budgets still converge instead of looping forever
+    tiny, _ = truncate_tree(tree, 1)
+    json.dumps(tiny)
+
+
+def test_stats_op_truncates_against_max_frame_bytes(rng):
+    mgr, _ = make_store(4)
+    eng = CrystalTPU()
+    gw = _gateway(mgr, eng, max_frame_bytes=8 << 10)
+    try:
+        # enough tenants that the full tree cannot fit the frame cap
+        clients = [GatewayClient(gw, f"trunc{i}") for i in range(8)]
+        data = rng.integers(0, 256, 4096, dtype=np.uint8).tobytes()
+        for i, c in enumerate(clients):
+            c.write(f"/t/{i}", data)
+        assert len(json.dumps(gw.snapshot_stats())) > (8 << 10) - 256
+        snap = clients[0].stats()   # decodes => the frame fit the cap
+        assert snap["stats_truncated"] >= 1
+        assert gw.stats["stats_truncated"] >= 1
+        # shallow scalar counters survive the pruning
+        assert "frames" in snap
+        for c in clients:
+            c.close()
+    finally:
+        gw.close()
+        eng.shutdown()
+
+
+# ----------------------------------------------------------------------
+# HTTP scrape endpoint
+# ----------------------------------------------------------------------
+def test_http_server_routes_and_codes():
+    health = {"status": "ok", "verdicts": []}
+    srv = HealthHTTPServer(
+        stats_fn=lambda: {"engine": {"launches": 2}},
+        health_fn=lambda: dict(health),
+        slowlog_fn=lambda: [{"rid": 1, "wall_s": 9.9}])
+    try:
+        code, body = _http_get(srv.port, "/metrics")
+        assert code == 200
+        assert b"# TYPE repro_engine_launches counter" in body
+        assert b"repro_engine_launches 2" in body
+
+        code, body = _http_get(srv.port, "/health")
+        assert code == 200 and json.loads(body)["status"] == "ok"
+
+        health["status"] = "critical"
+        code, body = _http_get(srv.port, "/health")
+        assert code == 503 and json.loads(body)["status"] == "critical"
+
+        code, body = _http_get(srv.port, "/slowlog")
+        assert code == 200
+        assert json.loads(body)["slow_requests"][0]["rid"] == 1
+
+        code, _ = _http_get(srv.port, "/nope")
+        assert code == 404
+    finally:
+        srv.close()
+        srv.close()                 # idempotent
+
+
+def test_http_server_handler_errors_are_500():
+    def boom():
+        raise RuntimeError("stats exploded")
+
+    srv = HealthHTTPServer(stats_fn=boom, health_fn=boom)
+    try:
+        code, _ = _http_get(srv.port, "/metrics")
+        assert code == 500
+    finally:
+        srv.close()
+
+
+# ----------------------------------------------------------------------
+# gateway integration: timeseries/health blocks + scrape endpoint
+# ----------------------------------------------------------------------
+def test_gateway_health_plane_blocks_and_scrape(rng):
+    mgr, _ = make_store(4)
+    eng = CrystalTPU(coalesce_window_s=0.01)
+    gw = _gateway(mgr, eng, health=True, metrics_port=0,
+                  sample_interval_s=0.05, sample_window_s=2.0)
+    try:
+        assert gw.sampler.running and gw.http.port > 0
+        client = GatewayClient(gw, "hmon")
+        for i in range(4):
+            client.write_retrying(
+                f"/h/{i}",
+                rng.integers(0, 256, 3 * 4096, np.uint8).tobytes())
+        assert _poll(lambda: gw.sampler.delta("obs/request/write/count"),
+                     timeout_s=5.0)
+        snap = gw.snapshot_stats()
+        assert snap["timeseries"]["samples"] >= 2
+        assert snap["timeseries"]["writes_per_s"] > 0
+        assert snap["health"]["status"] in ("ok", "warn")
+        # wire verb and HTTP route serve the same report shape
+        assert client.health()["status"] in ("ok", "warn")
+        code, body = _http_get(gw.http.port, "/health")
+        assert code == 200 and "verdicts" in json.loads(body)
+        code, body = _http_get(gw.http.port, "/metrics")
+        assert code == 200 and b"# TYPE" in body
+        client.close()
+    finally:
+        gw.close()
+        eng.shutdown()
+    assert not gw.sampler.running   # close() stops the plane
+    with pytest.raises(OSError):
+        _http_get(gw.http.port, "/health")
+
+
+# ----------------------------------------------------------------------
+# fault injector stall action
+# ----------------------------------------------------------------------
+def test_faultinject_stall_blocks_until_cleared():
+    inj = FaultInjector(stall_max_s=30.0)
+    inj.stall("site.x")
+    released = []
+
+    def victim():
+        inj.fire("site.x")
+        released.append(time.monotonic())
+
+    import threading
+    t = threading.Thread(target=victim, daemon=True)
+    t0 = time.monotonic()
+    t.start()
+    time.sleep(0.2)
+    assert not released             # still wedged
+    inj.clear_stall("site.x")
+    t.join(timeout=5.0)
+    assert released and released[0] - t0 >= 0.2
+    inj.fire("site.x")              # cleared arms don't re-trigger
+
+
+def test_faultinject_reset_releases_stalls():
+    inj = FaultInjector(stall_max_s=30.0)
+    inj.stall("site.y")
+    import threading
+    t = threading.Thread(target=lambda: inj.fire("site.y"), daemon=True)
+    t.start()
+    time.sleep(0.1)
+    inj.reset()
+    t.join(timeout=5.0)
+    assert not t.is_alive()
+
+
+# ----------------------------------------------------------------------
+# perf-regression gate (benchmarks/compare.py)
+# ----------------------------------------------------------------------
+def _summary(rows, counters=None):
+    return {"rows": [{"name": n, "us_per_call": us} for n, us in rows],
+            "counters": counters or {}}
+
+
+def test_compare_passes_identical_and_within_band():
+    base = _summary([("gateway/latency_p99/2c", 1000.0),
+                     ("recovery/fsync_p95", 500.0),
+                     ("fig4/throughput", 100.0)],
+                    {"mesh.digest_ok.ok": 1.0})
+    ok, problems = compare(base, base)
+    assert ok and not problems
+    fresh = _summary([("gateway/latency_p99/2c", 5000.0),   # within x7
+                      ("recovery/fsync_p95", 600.0),
+                      ("fig4/throughput", 1e9)],            # not latency
+                     {"mesh.digest_ok.ok": 1.0})
+    ok, problems = compare(base, fresh)
+    assert ok, problems
+
+
+def test_compare_fails_on_latency_regression():
+    base = _summary([("gateway/latency_p99/2c", 1000.0)])
+    fresh = _summary([("gateway/latency_p99/2c", 100000.0)])  # x100
+    ok, problems = compare(base, fresh)
+    assert not ok
+    assert any("LATENCY REGR" in p and "latency_p99" in p
+               for p in problems)
+
+
+def test_compare_fails_on_missing_row_and_ok_flag():
+    base = _summary([("gateway/latency_p99/2c", 1000.0)],
+                    {"mesh.digest_ok.ok": 1.0, "scrub.clean.ok": 1.0})
+    fresh = _summary([], {"mesh.digest_ok.ok": 0.0})
+    ok, problems = compare(base, fresh)
+    assert not ok
+    labels = "\n".join(problems)
+    assert "MISSING ROW" in labels
+    assert "COUNTER DIFF" in labels and "MISSING CTR" in labels
+
+
+def test_compare_tolerance_band_is_tunable():
+    base = _summary([("x/latency_p99", 100.0)])
+    fresh = _summary([("x/latency_p99", 1000.0)])
+    ok, _ = compare(base, fresh, tol=0.5, floor_us=10.0)
+    assert not ok
+    ok, _ = compare(base, fresh, tol=20.0, floor_us=10.0)
+    assert ok
+
+
+# ----------------------------------------------------------------------
+# acceptance drills
+# ----------------------------------------------------------------------
+def test_e2e_wal_stall_flips_health_and_recovers(tmp_path, rng):
+    """The health drill from the issue: stall the WAL flusher via fault
+    injection -> /health goes 503 with a ``wal_flusher_stalled``
+    verdict within two sampling intervals of the stall being observable
+    (writes keep committing via sync leader-election the whole time);
+    clearing the stall returns 200/ok."""
+    eng = CrystalTPU(coalesce_window_s=0.01)
+    gw = StorageGateway(engine=eng, config=GatewayConfig(
+        sai=_sai_cfg(), data_dir=str(tmp_path),
+        health=True, metrics_port=0,
+        sample_interval_s=0.05, sample_window_s=2.0,
+        health_config=HealthConfig(stall_after_s=0.4)))
+    inj = FaultInjector(stall_max_s=60.0)
+    try:
+        client = GatewayClient(gw, "drill")
+        for i in range(3):
+            client.write_retrying(
+                f"/d/{i}",
+                rng.integers(0, 256, 2 * 4096, np.uint8).tobytes())
+        assert _poll(lambda: client.health()["status"] == "ok",
+                     timeout_s=5.0)
+
+        gw.manager.wal.fault = inj
+        inj.stall("wal.flusher")
+
+        def stalled():
+            rep = client.health()
+            return rep if any(v["name"] == "wal_flusher_stalled"
+                              for v in rep["verdicts"]) else None
+        # flusher idle-ticks every <=0.1s, heartbeat trips at 0.4s, and
+        # the verdict must land within 2 sampling intervals after that
+        rep = _poll(stalled, timeout_s=0.1 + 0.4 + 2 * 0.05 + 2.0)
+        assert rep is not None, "watchdog never fired"
+        assert rep["status"] == "critical" and not rep["healthy"]
+        code, body = _http_get(gw.http.port, "/health")
+        assert code == 503
+        assert any(v["name"] == "wal_flusher_stalled"
+                   for v in json.loads(body)["verdicts"])
+        # degraded, not down: writes still commit around the dead
+        # flusher (sync leader-election)
+        client.write_retrying(
+            "/d/during",
+            rng.integers(0, 256, 4096, np.uint8).tobytes())
+
+        inj.clear_stall("wal.flusher")
+        assert _poll(lambda: client.health()["status"] == "ok",
+                     timeout_s=10.0), "health never recovered"
+        code, _ = _http_get(gw.http.port, "/health")
+        assert code == 200
+        client.close()
+    finally:
+        inj.clear_stall()
+        gw.close()
+        eng.shutdown()
+
+
+def test_e2e_device_straggler_named_and_clears(rng):
+    """Injected per-device latency skew (launch hook sleeping on device
+    0 of a 3-way mesh) must produce a ``device_straggler`` verdict
+    naming device 0, which clears once the skew and traffic stop."""
+    mgr, _ = make_store(4)
+    eng = CrystalTPU(devices=[jax.devices()[0]] * 3,
+                     coalesce_window_s=0.002)
+    eng._launch_hook = (lambda idx, batch:
+                        time.sleep(0.04) if idx == 0 else None)
+    gw = _gateway(mgr, eng, health=True,
+                  sample_interval_s=0.05, sample_window_s=2.0,
+                  health_config=HealthConfig(stall_after_s=10.0))
+    try:
+        client = GatewayClient(gw, "mesh")
+        data = np.ones((1, 4096), np.uint8)
+
+        def straggler():
+            # concurrent single-row bursts spread across the mesh; the
+            # hooked device's observed/estimated ratio drifts up while
+            # its peers' stays ~1.  Under host load (or a jit-compile
+            # transient) a peer can briefly spike and get flagged too,
+            # so wait for the verdict naming the injected device
+            # specifically — only its skew is persistent.
+            jobs = [eng.submit("direct", data, {}) for _ in range(9)]
+            for j in jobs:
+                j.wait()
+            rep = client.health()
+            hits = [v for v in rep["verdicts"]
+                    if v["rule"] == "straggler" and v["device"] == 0]
+            return hits[0] if hits else None
+
+        verdict = _poll(straggler, timeout_s=30.0, interval_s=0.0)
+        assert verdict is not None, "straggler never detected"
+        assert verdict["device"] == 0
+        assert verdict["name"] == "device_straggler"
+        assert verdict["status"] == "critical"
+
+        # remove the skew and stop traffic: the windowed launch deltas
+        # drain, so the rule goes silent deterministically
+        eng._launch_hook = None
+        assert _poll(
+            lambda: not any(v["rule"] == "straggler"
+                            for v in client.health()["verdicts"]),
+            timeout_s=10.0), "straggler verdict never cleared"
+        client.close()
+    finally:
+        gw.close()
+        eng.shutdown()
+
+
+def test_paused_runtime_and_idle_threads_stay_healthy(tmp_path, rng):
+    """Satellite 4, the false-positive control: a cleanly paused
+    runtime (scrub loops parked), an idle engine, an inline-fsync WAL
+    (``flush_interval_s=0`` -> no flusher thread at all), and drained
+    SAI pipelines must all report healthy — parked heartbeats are
+    dormancy, not stalls, no matter how old."""
+    from repro.core.castore import open_durable_store
+    mgr, _, _ = open_durable_store(str(tmp_path), n_nodes=4,
+                                   flush_interval_s=0.0)
+    eng = CrystalTPU(coalesce_window_s=0.01)
+    gw = StorageGateway(mgr, engine=eng, config=GatewayConfig(
+        sai=_sai_cfg(), scrub=True,
+        health=True, sample_interval_s=0.05, sample_window_s=2.0,
+        health_config=HealthConfig(stall_after_s=0.3)))
+    try:
+        client = GatewayClient(gw, "quiet")
+        for i in range(2):
+            client.write_retrying(
+                f"/q/{i}",
+                rng.integers(0, 256, 2 * 4096, np.uint8).tobytes())
+        gw.runtime.pause()
+        # idle for several multiples of stall_after_s: every blocked
+        # thread (scheduler, completers, SAI stages, scrub loops, the
+        # absent flusher) must be parked, not "stalled"
+        time.sleep(1.2)
+        rep = client.health()
+        assert rep["status"] == "ok", rep["verdicts"]
+        flat = gw.sampler.latest_flat()
+        parked = [k for k in flat
+                  if "/heartbeats/" in k and k.endswith("/parked")]
+        assert parked, "no heartbeats visible in the sampled tree"
+        # the WAL flusher heartbeat exists and is parked (inline mode)
+        assert flat.get("wal/heartbeats/flusher/parked") == 1
+        gw.runtime.resume()
+        client.write_retrying(
+            "/q/after",
+            rng.integers(0, 256, 4096, np.uint8).tobytes())
+        # a fresh pad-shape JIT compile can hold threads busy (unparked,
+        # not beating) past the tight test threshold right after resume
+        # — health must settle back to ok once the work drains
+        assert _poll(lambda: client.health()["status"] == "ok",
+                     timeout_s=10.0), client.health()["verdicts"]
+        client.close()
+    finally:
+        gw.close()
+        eng.shutdown()

@@ -140,7 +140,11 @@ def test_flatten_and_prometheus_text():
     text = prometheus_text(tree)
     assert "repro_tenants_acme_completed 3\n" in text
     assert "repro_engine_per_device_0_p50_s 0.25" in text
+    assert "# TYPE repro_tenants_acme_completed counter\n" in text
     for line in text.strip().splitlines():
+        if line.startswith("#"):                  # TYPE annotations
+            assert line.split(" ")[1] == "TYPE"
+            continue
         name, value = line.split(" ")
         float(value)                              # every line parses
         assert name.startswith("repro_")
