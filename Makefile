@@ -1,6 +1,6 @@
 PYTHON ?= python
 
-.PHONY: test test-fast test-crash dev-deps bench bench-smoke bench-mesh-smoke bench-compare
+.PHONY: test test-fast test-crash dev-deps bench bench-smoke bench-mesh-smoke bench-compare lint-invariants lint-invariants-selftest
 
 dev-deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -13,6 +13,24 @@ test-fast:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q tests/test_crystal.py \
 		tests/test_offload_engine.py tests/test_castore.py \
 		tests/test_checkpoint.py tests/test_chunking.py
+
+# invariant lint suite (docs/STATIC_ANALYSIS.md): fails on any finding
+# not in the committed baseline; ra-findings.txt is the CI artifact
+lint-invariants:
+	PYTHONPATH=src $(PYTHON) -m repro.analysis src/repro \
+		--baseline analysis-baseline.txt --report ra-findings.txt
+
+# prove the checkers still catch violations: every `# ra-selftest:`
+# marker in the fixtures must be reported at exactly its file:line,
+# and a raw run over the bad fixtures must exit non-zero
+lint-invariants-selftest:
+	PYTHONPATH=src $(PYTHON) -m repro.analysis \
+		--selftest tests/fixtures/analysis
+	@if PYTHONPATH=src $(PYTHON) -m repro.analysis \
+		tests/fixtures/analysis --root tests/fixtures/analysis \
+		> /dev/null 2>&1; then \
+		echo "ERROR: bad fixtures produced a zero exit"; exit 1; \
+	else echo "fixture violations exit non-zero: ok"; fi
 
 # durability: WAL framing fuzz + crash/restart fault-injection matrix
 test-crash:

@@ -59,8 +59,8 @@ class BlockStore:
         self._lock = threading.Lock()
         self._crashed = False
         # digest -> (seg_id, data_offset, length)
-        self._index: Dict[bytes, Tuple[int, int, int]] = {}
-        self._handles: Dict[int, object] = {}
+        self._index: Dict[bytes, Tuple[int, int, int]] = {}  # guarded by self._lock
+        self._handles: Dict[int, object] = {}  # guarded by self._lock
         self.metrics = MetricsRegistry()
         self.stats = self.metrics.group(
             ("puts", "skipped_puts", "replaced", "drops", "flushes",
@@ -74,7 +74,7 @@ class BlockStore:
         return os.path.join(self.path,
                             f"{_SEG_PREFIX}{seg_id:012d}{_SEG_SUFFIX}")
 
-    def _scan(self):
+    def _scan(self):  # ra: disable=RA01(runs from __init__ pre-publication, single-threaded)
         seg_ids = []
         for name in os.listdir(self.path):
             if name.startswith(_SEG_PREFIX) and name.endswith(_SEG_SUFFIX):
@@ -115,8 +115,9 @@ class BlockStore:
                 with open(full, "r+b") as fh:
                     fh.truncate(off)
         if seg_ids:
-            self._cur_seg = seg_ids[-1]
-            self._cur_size = os.path.getsize(self._seg_path(self._cur_seg))
+            self._cur_seg = seg_ids[-1]  # guarded by self._lock
+            self._cur_size = os.path.getsize(  # guarded by self._lock
+                self._seg_path(self._cur_seg))
         else:
             self._cur_seg = 0
             self._cur_size = 0
@@ -126,9 +127,9 @@ class BlockStore:
         # same digest, but there is only one resident copy to verify)
         self.suspects = [d for d in dict.fromkeys(last_seg_digests)
                          if d in self._index]
-        self._buf = bytearray()
-        self._buf_base = self._cur_size     # disk offset where _buf begins
-        self._pending: Dict[bytes, bytes] = {}
+        self._buf = bytearray()  # guarded by self._lock
+        self._buf_base = self._cur_size  # disk offset where _buf begins; guarded by self._lock
+        self._pending: Dict[bytes, bytes] = {}  # guarded by self._lock
 
     # ------------------------------------------------------------ helpers
 
@@ -145,7 +146,7 @@ class BlockStore:
             self._crashed = True
             raise
 
-    def _append_fh(self):
+    def _append_fh(self):  # ra: holds self._lock
         fh = self._handles.get(-self._cur_seg - 1)
         if fh is None:
             fh = open(self._seg_path(self._cur_seg), "ab")
@@ -208,7 +209,7 @@ class BlockStore:
                 fh.write(torn)
                 fh.flush()
                 if self.fsync_enabled:
-                    os.fsync(fh.fileno())
+                    os.fsync(fh.fileno())  # ra: disable=RA04(fault-injection branch: simulated torn write must land before the crash)
                 self._crashed = True
                 raise CrashPoint("blockstore.put:torn", -1)
             if digest in self._index:

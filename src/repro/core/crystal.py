@@ -129,9 +129,10 @@ class LaneQueue:
 
     def __init__(self):
         self._cv = threading.Condition()
+        # guarded by self._cv
         self._lanes: Dict[str, collections.deque] = \
             {lane: collections.deque() for lane in LANES}
-        self._sentinels = 0
+        self._sentinels = 0  # guarded by self._cv
 
     def put(self, item, lane: str = "fg"):
         with self._cv:
@@ -148,7 +149,7 @@ class LaneQueue:
         self._sentinels -= 1            # caller checked _sentinels > 0
         return None
 
-    def _nonempty(self) -> bool:
+    def _nonempty(self) -> bool:  # ra: holds self._cv
         return bool(self._sentinels
                     or any(self._lanes[lane] for lane in LANES))
 
@@ -542,9 +543,9 @@ class CrystalTPU:
         self.idle: "queue.Queue[dict]" = queue.Queue()
         for _ in range(n_slots):
             self.idle.put({})          # slot: staging-buffer cache by shape
-        self.running: List[Job] = []
+        self.running: List[Job] = []  # guarded by self._lock
         self._lock = threading.Lock()
-        self._rr = 0
+        self._rr = 0  # guarded by self._lock
         self.metrics = metrics_mod.MetricsRegistry()
         # atomic counters: manager threads and submitters bump these
         # concurrently; reads keep the old plain-dict shape
@@ -571,7 +572,7 @@ class CrystalTPU:
                              daemon=True, name=f"crystal-mgr-{s.index}")
             for s in self._dev_states]
         self._alive = True
-        self._shutdown_started = False
+        self._shutdown_started = False  # guarded by self._lock
         for t in self._managers:
             t.start()
 

@@ -540,7 +540,7 @@ class SAI:
         fut = WriteFuture()
         with self._pipe_lock:
             self._ensure_pipeline()
-            self._chunk_q.put((fut, path, bytes(data), trace))
+            self._chunk_q.put((fut, path, bytes(data), trace))  # ra: disable=RA04(unbounded queue: put cannot block; hoisting it would race close)
         return fut
 
     def flush(self):
@@ -936,7 +936,7 @@ class SAI:
         fut = ReadFuture()
         with self._pipe_lock:
             self._ensure_read_pipeline()
-            self._fetch_q.put((fut, path, version, verify, trace))
+            self._fetch_q.put((fut, path, version, verify, trace))  # ra: disable=RA04(unbounded queue: put cannot block; hoisting it would race close)
         return fut
 
     def _ensure_read_pipeline(self):

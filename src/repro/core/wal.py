@@ -143,11 +143,11 @@ class WriteAheadLog:
 
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
-        self._buf = bytearray()
+        self._buf = bytearray()  # guarded by self._lock
         self._crashed = False
         self._closed = False
-        self._pending_seq = 0
-        self._flushed_seq = 0
+        self._pending_seq = 0  # guarded by self._lock
+        self._flushed_seq = 0  # guarded by self._lock
         self._records_since_snap = 0
         self.metrics = MetricsRegistry()
         self.stats = self.metrics.group(
@@ -176,7 +176,7 @@ class WriteAheadLog:
 
     # ------------------------------------------------------------ recovery
 
-    def _recover_dir(self):
+    def _recover_dir(self):  # ra: disable=RA01(runs from __init__ before the flusher thread exists)
         names = os.listdir(self.path)
         snaps = sorted((s, n) for n in names
                        if (s := _file_seq(n, _SNAP_PREFIX, _SNAP_SUFFIX))
@@ -411,7 +411,7 @@ class WriteAheadLog:
                 fh.write(frame)
                 fh.flush()
                 if self.fsync:
-                    os.fsync(fh.fileno())
+                    os.fsync(fh.fileno())  # ra: disable=RA04(snapshot fsync IS the commit point; the lock is the serialiser)
             os.replace(tmp, final)
             # rotate: new appends land in a fresh file starting past seq
             self._fh.close()

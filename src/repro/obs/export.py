@@ -30,11 +30,27 @@ _COUNTER_LEAVES = frozenset({
 })
 
 
+def _escape_key(key) -> str:
+    """Percent-escape the path separator (and '%' itself) in one tree
+    key, so a tenant named ``a/b`` can't flatten to the same metric name
+    as the genuinely nested path ``a -> b``."""
+    k = str(key)
+    if "%" in k or "/" in k:
+        k = k.replace("%", "%25").replace("/", "%2F")
+    return k
+
+
 def flatten(tree: Mapping, prefix: str = "") -> Dict[str, float]:
-    """Flatten a nested stats tree to {joined/key: numeric leaf}."""
+    """Flatten a nested stats tree to {joined/key: numeric leaf}.
+
+    ``/`` inside a single key is escaped as ``%2F`` (and ``%`` as
+    ``%25``): distinct tree paths always flatten to distinct names, and
+    consumers that split on ``/`` (the health rules, prometheus_text)
+    recover the exact component boundaries."""
     out: Dict[str, float] = {}
     for key, value in tree.items():
-        path = f"{prefix}/{key}" if prefix else str(key)
+        ekey = _escape_key(key)
+        path = f"{prefix}/{ekey}" if prefix else ekey
         if isinstance(value, Mapping):
             out.update(flatten(value, path))
         elif isinstance(value, bool):

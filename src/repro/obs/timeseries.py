@@ -73,7 +73,7 @@ class MetricsSampler:
         with self._lock:
             self._listeners.append(fn)
 
-    def _loop(self) -> None:
+    def _loop(self) -> None:  # ra: disable=RA05(the sampler is the health plane's clock; the metrics_sampler_stalled SLO rule is its watchdog)
         while not self._stop.is_set():
             self.sample_once()
             self._stop.wait(self.interval_s)

@@ -113,13 +113,13 @@ class TokenAuthenticator:
     connection reader threads at once."""
 
     def __init__(self, secrets: Dict[str, bytes]):
-        self._secrets = {t: bytes(s) for t, s in secrets.items()}
+        self._secrets = {t: bytes(s) for t, s in secrets.items()}  # guarded by self._lock
         self._lock = threading.Lock()
-        self._seen: Dict[Tuple[str, bytes], float] = {}   # nonce->expiry
+        self._seen: Dict[Tuple[str, bytes], float] = {}  # nonce -> expiry; guarded by self._lock
         # expiry-ordered heap over _seen keys: pruning pops only the
         # already-expired head instead of scanning the whole cache under
         # the lock on every open
-        self._expiries: List[Tuple[float, Tuple[str, bytes]]] = []
+        self._expiries: List[Tuple[float, Tuple[str, bytes]]] = []  # guarded by self._lock
         # unknown tenants still pay for a full HMAC against this dummy
         # secret, so a timing probe on the open path can't distinguish
         # "tenant exists" from "tenant doesn't"
@@ -139,7 +139,8 @@ class TokenAuthenticator:
         if now is None:
             now = time.time()
         tenant, expiry, nonce, sig, body = parse_token(token)
-        secret = self._secrets.get(tenant)
+        with self._lock:
+            secret = self._secrets.get(tenant)
         # always do the HMAC (decoy-keyed for unknown tenants) and share
         # one error message, so neither timing nor the reply text tells
         # a prober whether a tenant name exists

@@ -450,17 +450,17 @@ class StorageGateway:
 
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
-        self._tenants: Dict[str, _Tenant] = {}
-        self._order: List[_Tenant] = []       # WDRR visit order
+        self._tenants: Dict[str, _Tenant] = {}  # guarded by self._cv
+        self._order: List[_Tenant] = []  # WDRR visit order; guarded by self._cv
         # session id -> (tenant, owner).  ``owner`` is the opaque
         # transport identity that opened the session (the socket
         # connection object; None for trusted in-process callers) —
         # every later frame must come from the SAME owner, so a TCP
         # client can't act on a session id it merely guessed.
-        self._sessions: Dict[int, Tuple[_Tenant, Any]] = {}
-        self._next_session = 1
-        self._rr = 0
-        self._closed = False
+        self._sessions: Dict[int, Tuple[_Tenant, Any]] = {}  # guarded by self._cv
+        self._next_session = 1  # guarded by self._cv
+        self._rr = 0  # guarded by self._cv
+        self._closed = False  # guarded by self._cv
         self._stop = threading.Event()
         self.metrics = MetricsRegistry()
         self.stats = self.metrics.group(
@@ -477,7 +477,10 @@ class StorageGateway:
         # health plane can compute windowed SLO violation rates)
         self._hist_qos = {q: self.metrics.histogram(f"qos_s/{q}")
                           for q in QOS_LANES}
-        self.metrics.gauge("sessions", fn=lambda: len(self._sessions))
+        self.metrics.gauge(
+            "sessions",
+            # ra: disable=RA01(len() on a dict is atomic in CPython; advisory gauge)
+            fn=lambda: len(self._sessions))
         self.heartbeats = HeartbeatBoard()
         self.runtime: Optional[ClusterRuntime] = None
         if self.cfg.scrub:
@@ -1008,6 +1011,7 @@ class StorageGateway:
         with self._cv:
             already = self._closed
             self._closed = True
+            tenants = list(self._order)  # snapshot: teardown below is unlocked
             if not already:
                 deadline = time.monotonic() + timeout
                 while not self._drained_locked() \
@@ -1035,9 +1039,9 @@ class StorageGateway:
         if self.http is not None:
             self.http.close()
         self.sampler.stop()
-        for t in self._order:
+        for t in tenants:
             t.completion_q.put(None)
-        for t in self._order:
+        for t in tenants:
             if t.completer is not None:
                 t.completer.join(timeout=10)
             t.sai.close()

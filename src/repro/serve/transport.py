@@ -133,7 +133,7 @@ def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
     return bytes(buf)
 
 
-def recv_frame(sock: socket.socket,
+def recv_frame(sock: socket.socket,  # ra: decode-boundary
                max_frame_bytes: int = MAX_FRAME_BYTES
                ) -> Optional[bytes]:
     """Read one length-prefixed frame; None on clean EOF.  The length
@@ -178,9 +178,9 @@ class SocketChannel:
         self._sock.settimeout(None)
         self._lock = threading.Lock()
         self._wlock = threading.Lock()
-        self._pending: Dict[int, Tuple[int, ReplyFuture]] = {}
-        self._closing = False          # no NEW requests
-        self._dead = False             # reader gone; nothing in flight
+        self._pending: Dict[int, Tuple[int, ReplyFuture]] = {}  # guarded by self._lock
+        self._closing = False  # no NEW requests; guarded by self._lock
+        self._dead = False  # reader gone, nothing in flight; guarded by self._lock
         self._reader = threading.Thread(target=self._reader_loop,
                                         daemon=True,
                                         name="socket-channel-rx")
@@ -188,7 +188,7 @@ class SocketChannel:
 
     # -- transport contract --------------------------------------------
     def request(self, frame: bytes) -> ReplyFuture:
-        op, _session, rid, _trace = _REQ_HDR.unpack_from(frame)
+        op, _session, rid, _trace = _REQ_HDR.unpack_from(frame)  # ra: disable=RA03(frame was encoded by our own codec one call up; not wire bytes)
         reply = ReplyFuture()
         with self._lock:
             if self._closing or self._dead:
@@ -200,7 +200,7 @@ class SocketChannel:
             self._pending[rid] = (op, reply)
         try:
             with self._wlock:
-                send_frame(self._sock, frame, self._max)
+                send_frame(self._sock, frame, self._max)  # ra: disable=RA04(_wlock exists solely to serialise frame writes; never nested)
         except OSError as e:
             with self._lock:
                 self._pending.pop(rid, None)
@@ -232,7 +232,7 @@ class SocketChannel:
         return encode_response(ST_ERROR, op, rid,
                                errtype="ConnectionError", msg=msg)
 
-    def _reader_loop(self):
+    def _reader_loop(self):  # ra: disable=RA05(per-connection thread; lifetime == socket lifetime, exits on EOF)
         why = "server closed the connection"
         try:
             while True:
@@ -292,7 +292,7 @@ class _Connection:
         self.reader.start()
         self.writer.start()
 
-    def _reader_loop(self):
+    def _reader_loop(self):  # ra: disable=RA05(per-connection thread; lifetime == socket lifetime, exits on EOF)
         srv = self.server
         try:
             while True:
@@ -340,7 +340,7 @@ class _Connection:
             except BlockingIOError:
                 continue               # lost the race for buffer space
 
-    def _writer_loop(self):
+    def _writer_loop(self):  # ra: disable=RA05(per-connection thread; bounded writeq, exits on sentinel)
         srv = self.server
         got_sentinel = False
         try:
@@ -427,8 +427,8 @@ class GatewayServer:
             raise ValueError("max_pipeline must be >= 1")
         self.max_pipeline = max_pipeline
         self._lock = threading.Lock()
-        self._conns: set = set()
-        self._closed = False
+        self._conns: set = set()  # guarded by self._lock
+        self._closed = False  # guarded by self._lock
         # atomic counters: connection reader threads bump these without
         # taking the server lock
         self.metrics = MetricsRegistry()
@@ -469,7 +469,7 @@ class GatewayServer:
     def __exit__(self, *exc):
         self.close()
 
-    def _accept_loop(self):
+    def _accept_loop(self):  # ra: disable=RA05(accept loop blocks in the kernel, not on our queues; exits on close)
         while True:
             try:
                 sock, peer = self._lsock.accept()

@@ -1,0 +1,18 @@
+"""RA01 fixture: a guarded attribute touched outside its lock.
+
+Never imported — scanned by the analysis selftest only.
+"""
+import threading
+
+
+class BadCounter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._n = 0  # guarded by self._lock
+
+    def bump(self):
+        self._n += 1  # ra-selftest: RA01
+
+    def read(self):
+        with self._lock:
+            return self._n

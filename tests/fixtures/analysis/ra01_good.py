@@ -1,0 +1,26 @@
+"""RA01 fixture (good): every touch of the guarded attribute is locked,
+via the lock itself, a Condition alias, a `_locked` suffix, or an
+explicit holds annotation."""
+import threading
+
+
+class GoodCounter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._n = 0  # guarded by self._lock
+
+    def bump(self):
+        with self._lock:
+            self._n += 1
+
+    def bump_via_alias(self):
+        with self._cv:  # Condition(self._lock): same lock, two names
+            self._n += 1
+            self._cv.notify()
+
+    def _drain_locked(self):
+        return self._n
+
+    def _predicate(self):  # ra: holds self._lock
+        return self._n > 0

@@ -1,0 +1,13 @@
+"""RA02 fixture: raw read-modify-write on a CounterGroup.
+
+Never imported — scanned by the analysis selftest only.
+"""
+
+
+class BadGateway:
+    def __init__(self, stats):
+        self.stats = stats
+
+    def on_frame(self, nbytes):
+        self.stats["frames"] += 1  # ra-selftest: RA02
+        self.stats.setdefault("bytes_in", nbytes)  # ra-selftest: RA02

@@ -1,0 +1,13 @@
+"""RA02 fixture (good): mutation through the atomic CounterGroup API;
+plain assignment routes through Counter.set and is allowed."""
+
+
+class GoodGateway:
+    def __init__(self, stats):
+        self.stats = stats
+        self.stats["frames"] = 0
+
+    def on_frame(self, nbytes):
+        self.stats.inc("frames")
+        self.stats.inc("bytes_in", nbytes)
+        self.stats.max_update("peak_frame_bytes", nbytes)

@@ -1,0 +1,21 @@
+"""RA04 fixture: blocking calls lexically inside `with <lock>:`.
+
+Never imported — scanned by the analysis selftest only.
+"""
+import os
+import queue
+import threading
+import time
+
+
+class BadFlusher:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.writeq = queue.Queue(maxsize=8)
+
+    def flush(self, fh, fut):
+        with self._lock:
+            time.sleep(0.01)  # ra-selftest: RA04
+            os.fsync(fh.fileno())  # ra-selftest: RA04
+            self.writeq.put(b"frame")  # ra-selftest: RA04
+            return fut.result()  # ra-selftest: RA04

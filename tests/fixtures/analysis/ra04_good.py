@@ -1,0 +1,23 @@
+"""RA04 fixture (good): the lock covers only state mutation; blocking
+work happens outside, on snapshots taken under the lock."""
+import os
+import queue
+import threading
+import time
+
+
+class GoodFlusher:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.writeq = queue.Queue(maxsize=8)
+        self._dirty = b""
+
+    def flush(self, fh, fut):
+        with self._lock:
+            data = self._dirty
+            self._dirty = b""
+            self.writeq.put(b"frame", block=False)  # non-blocking is fine
+        fh.write(data)
+        os.fsync(fh.fileno())
+        time.sleep(0.01)
+        return fut.result()

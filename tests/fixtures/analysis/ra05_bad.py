@@ -1,0 +1,23 @@
+"""RA05 fixture: a looping thread target that never beats a Heartbeat.
+
+Never imported — scanned by the analysis selftest only.
+"""
+import threading
+
+
+class BadWorker:
+    def __init__(self):
+        self.stop = False
+        self._thread = threading.Thread(target=self._main, daemon=True)  # ra-selftest: RA05
+
+    def _main(self):
+        # indirection on purpose: the checker chases the in-module call
+        # graph, so hiding the while loop one call down doesn't help
+        self._loop()
+
+    def _loop(self):
+        while not self.stop:
+            self._step()
+
+    def _step(self):
+        pass

@@ -1,0 +1,24 @@
+"""RA05 fixture (good): the loop beats its Heartbeat each iteration and
+parks before blocking; one-shot targets need no heartbeat at all."""
+import threading
+
+
+class GoodWorker:
+    def __init__(self, heartbeat):
+        self.stop = False
+        self.hb = heartbeat
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._oneshot = threading.Thread(target=self._drain, daemon=True)
+
+    def _loop(self):
+        while not self.stop:
+            self.hb.beat()
+            self._step()
+        self.hb.park()
+
+    def _drain(self):
+        # no while loop: a one-shot worker is outside RA05's scope
+        self._step()
+
+    def _step(self):
+        pass

@@ -1,0 +1,22 @@
+"""RA06 fixture: wire-table drift, three ways at once.
+
+* the dispatch switch never handles OP_CLOSE (a close frame would hang);
+* OP_NAMES skips OP_CLOSE (tracing labels silently lost);
+* the documented table says OP_READ is 7 and has no OP_CLOSE row.
+
+Never imported — scanned by the analysis selftest only.
+"""
+
+(OP_OPEN, OP_WRITE, OP_READ, OP_CLOSE) = range(4)  # ra-selftest: RA06
+
+OP_NAMES = {OP_OPEN: "open", OP_WRITE: "write", OP_READ: "read"}  # ra-selftest: RA06
+
+
+def _handle(op):  # ra-selftest: RA06
+    if op == OP_OPEN:
+        return "open"
+    if op == OP_WRITE:
+        return "write"
+    if op == OP_READ:
+        return "read"
+    return None

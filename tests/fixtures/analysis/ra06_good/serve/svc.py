@@ -1,0 +1,19 @@
+"""RA06 fixture (good): opcodes, OP_NAMES, the dispatch switch, and the
+documented table all agree."""
+
+(OP_OPEN, OP_WRITE, OP_READ, OP_CLOSE) = range(4)
+
+OP_NAMES = {OP_OPEN: "open", OP_WRITE: "write", OP_READ: "read",
+            OP_CLOSE: "close"}
+
+
+def _handle(op):
+    if op == OP_OPEN:
+        return "open"
+    if op == OP_WRITE:
+        return "write"
+    if op == OP_READ:
+        return "read"
+    if op == OP_CLOSE:
+        return "close"
+    return None

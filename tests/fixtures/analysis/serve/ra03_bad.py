@@ -1,0 +1,21 @@
+"""RA03 fixture: raw unpack of wire bytes, and a wire-decoded length
+reaching an allocation before any bound check.
+
+Never imported — scanned by the analysis selftest only.  Lives under
+``serve/`` because RA03 only applies to wire/durable-format modules.
+"""
+import struct
+
+_HDR = struct.Struct("!BIQ")
+
+
+def decode_request(frame):
+    op, session, length = _HDR.unpack_from(frame)  # ra-selftest: RA03
+    return op, session, length
+
+
+def read_payload(sock, header):
+    if len(header) < 4:
+        raise ValueError("short header")
+    (n,) = struct.unpack("!I", header)
+    return sock.recv(n)  # ra-selftest: RA03

@@ -1,0 +1,35 @@
+"""RA03 fixture (good): bounds check before unpack, domain error on
+malformed bytes, and the length capped before allocation."""
+import struct
+
+_HDR = struct.Struct("!BIQ")
+MAX_FRAME_BYTES = 64 << 20
+
+
+class CodecError(ValueError):
+    pass
+
+
+def decode_request(frame):
+    if len(frame) < _HDR.size:
+        raise CodecError("truncated header")
+    op, session, length = _HDR.unpack_from(frame)
+    if length > MAX_FRAME_BYTES:
+        raise CodecError("oversized payload")
+    return op, session, bytes(frame[_HDR.size:_HDR.size + length])
+
+
+def decode_trusted(frame):
+    try:
+        return _HDR.unpack_from(frame)
+    except struct.error as e:
+        raise CodecError(str(e)) from None
+
+
+def read_payload(sock, header):
+    if len(header) < 4:
+        raise CodecError("short header")
+    (n,) = struct.unpack("!I", header)
+    if n > MAX_FRAME_BYTES:
+        raise CodecError("oversized frame")
+    return sock.recv(n)

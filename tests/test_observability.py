@@ -126,6 +126,20 @@ def test_concurrent_increments_lose_no_updates():
     assert hist.count == n_threads * n_iter
 
 
+def test_flatten_separator_in_key_cannot_collide():
+    # a tenant literally named "a/b" must not flatten to the same metric
+    # name as the genuinely nested path a -> b
+    tree = {"tenants": {"a": {"b": 1}, "a/b": 2}}
+    flat = flatten(tree)
+    assert flat["tenants/a/b"] == 1.0
+    assert flat["tenants/a%2Fb"] == 2.0
+    assert len(flat) == 2
+    # '%' itself round-trips unambiguously too
+    flat2 = flatten({"x%2Fy": 1, "x/y": 2})
+    assert flat2["x%252Fy"] == 1.0
+    assert flat2["x%2Fy"] == 2.0
+
+
 def test_flatten_and_prometheus_text():
     tree = {"tenants": {"acme": {"completed": 3, "qos": "batch"}},
             "engine": {"per_device": {0: {"jobs": 5, "p50_s": 0.25}}},
